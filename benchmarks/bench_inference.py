@@ -1,0 +1,41 @@
+"""Paper Table 3 / Fig. 21: inference stress test -- total time to serve N
+requests on the four platforms (baremetal / plain-k8s / kserve-gcp /
+kserve-ibm).  Compute latencies are measured on this host; network/reload
+constants come from the CloudProfiles (DESIGN.md simulation note)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.clouds.profiles import get_profile
+from repro.data.mnist import make_dataset
+from repro.models import lenet
+from repro.serving.kserve import InferenceService, Predictor
+
+REQUEST_COUNTS = (1, 4, 8, 16, 32, 64, 128, 256, 512)
+PLATFORMS = (("baremetal", "baremetal"), ("k8s", "k8s"),
+             ("kserve", "gcp"), ("kserve", "ibm"))
+
+
+def run() -> list[dict]:
+    imgs, _ = make_dataset(8, seed=0)
+    params = lenet.init_params(jax.random.PRNGKey(0))
+    predict = jax.jit(lambda x: jnp.argmax(lenet.apply(params, x), -1))
+    pred = Predictor("lenet-v1", predict, imgs[:1])
+    pred.warmup((1,))
+
+    rows = []
+    for strategy, profile in PLATFORMS:
+        svc = InferenceService(pred, get_profile(profile), strategy)
+        label = f"{strategy}_{profile}" if strategy == "kserve" else strategy
+        totals = []
+        for n in REQUEST_COUNTS:
+            res = svc.stress_test(n)
+            totals.append(f"{n}:{res.total_time_s:.4f}")
+            rows.append({
+                "name": f"inference_{label}_n{n}",
+                "us_per_call": res.total_time_s * 1e6 / n,
+                "derived": f"total_s={res.total_time_s:.4f};p99_s={res.p99:.4f};"
+                           f"replicas={max(r for _, r in res.replica_trace)}",
+            })
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Table 2 / Fig. 20: average Katib wall time for grid / random /
+bayesian across max_trials budgets, on the paper's workload (LeNet/MNIST
+hyperparameter tuning: learning rate + batch size)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.trainjob import SupervisedTrainJob
+from repro.data.mnist import Batches, make_dataset
+from repro.tuning import katib
+
+TRIAL_BUDGETS = (3, 5, 8)     # paper used 5/10/15 on cloud; scaled for 1-core CPU
+ALGOS = ("random", "bayesian", "grid")
+
+
+def run(n_examples: int = 256, n_steps: int = 8) -> list[dict]:
+    imgs, labels = make_dataset(n_examples, seed=0)
+    # paper §5.3: lr in [0.01, 0.05], batch in [80, 100]; batch rounded to
+    # pow2-ish buckets to bound jit retraces on CPU
+    space = {"lr": katib.Double(0.01, 0.05),
+             "batch_size": katib.Categorical((64, 80, 96))}
+
+    def objective(params, report):
+        job = SupervisedTrainJob(lr=params["lr"], n_steps=n_steps, width=8)
+        res = job.run(Batches(imgs, labels, int(params["batch_size"])),
+                      report=report)
+        return {"loss": res["loss"]}
+
+    rows = []
+    for algo in ALGOS:
+        for budget in TRIAL_BUDGETS:
+            t0 = time.perf_counter()
+            exp = katib.tune(objective, space, algorithm=algo,
+                             max_trials=budget, seed=0,
+                             early_stopping=katib.MedianStop())
+            wall = time.perf_counter() - t0
+            best = exp.best_trial()
+            rows.append({
+                "name": f"katib_{algo}_trials{budget}",
+                "us_per_call": wall * 1e6 / budget,
+                "derived": f"best_loss={exp.objective(best):.4f};"
+                           f"total_s={wall:.2f};"
+                           f"early_stopped={sum(t.status == 'early_stopped' for t in exp.trials)}",
+            })
+    return rows

@@ -1,0 +1,36 @@
+"""Roofline table (deliverable g): read the dry-run artifacts from
+experiments/dryrun and emit one row per (arch x shape x mesh) with the three
+terms, the bottleneck, and the useful-flops ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec.get("tag"):
+            name += f"_{rec['tag']}"
+        if rec["status"] == "skipped":
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"skipped:{rec['reason'][:60]}"})
+            continue
+        if rec["status"] != "ok":
+            rows.append({"name": name, "us_per_call": -1.0,
+                         "derived": f"error:{rec.get('error', '?')[:60]}"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": r["bound_s"] * 1e6,
+            "derived": (f"dominant={r['dominant']};compute_s={r['compute_s']:.4g};"
+                        f"memory_s={r['memory_s']:.4g};"
+                        f"collective_s={r['collective_s']:.4g};"
+                        f"useful_ratio={rec.get('useful_flops_ratio', 0) or 0:.3g}"),
+        })
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table + roofline + kernels.
+Prints ``name,us_per_call,derived`` CSV (spec'd output format).
+
+  python -m benchmarks.run [--only katib|inference|pipeline|roofline|kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import bench_inference, bench_katib, bench_kernels, bench_pipeline, \
+    bench_roofline
+
+SUITES = {
+    "inference": bench_inference.run,     # paper Table 3 / Fig 21
+    "pipeline": bench_pipeline.run,       # paper Tables 4+5 / Figs 22-23
+    "katib": bench_katib.run,             # paper Table 2 / Fig 20
+    "roofline": bench_roofline.run,       # deliverable (g)
+    "kernels": bench_kernels.run,         # kernel microbench
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SUITES), default=None)
+    args = ap.parse_args(argv)
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness running table-per-table
+            print(f"{name}_SUITE_ERROR,-1,{type(e).__name__}:{str(e)[:80]}",
+                  flush=True)
+            continue
+        for r in rows:
+            derived = str(r["derived"]).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']:.2f},{derived}", flush=True)
+        print(f"# suite {name} finished in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Serve an LLM (reduced config of any assigned arch) through the KServe
+analog with batched greedy generation + canary rollout between two model
+versions.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch zamba2-1.2b
+"""
+import argparse
+import json
+
+from repro.clouds.profiles import get_profile
+from repro.configs import registry
+from repro.launch.serve import make_lm_predictor
+from repro.serving.kserve import InferenceService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-1.2b")
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke_config(args.arch)
+    v1 = make_lm_predictor(cfg, gen_tokens=8, seed=0)
+    v2 = make_lm_predictor(cfg, gen_tokens=8, seed=1)   # canary candidate
+    v2.name = f"{cfg.name}-canary"
+
+    svc = InferenceService(v1, get_profile("gcp"), "kserve", max_batch=8,
+                           canary=v2, canary_fraction=0.2)
+    res = svc.stress_test(args.requests)
+    print(json.dumps(res.summary(), indent=1))
+    assert sum(res.per_version.values()) == args.requests
+
+
+if __name__ == "__main__":
+    main()

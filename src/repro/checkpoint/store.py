@@ -1,0 +1,86 @@
+"""Artifact / checkpoint store -- the PVC analog.
+
+Pytrees are flattened to path-keyed .npz shards; every artifact gets a
+content hash, so pipeline steps can be cached (Kubeflow component caching
+analog) and model versions can be diffed for canary rollouts.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def tree_hash(tree: Any) -> str:
+    h = hashlib.sha256()
+    for key, arr in sorted(_flatten(tree).items()):
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes()[:65536])  # prefix hash
+    return h.hexdigest()[:16]
+
+
+class ArtifactStore:
+    """Content-addressed artifact store rooted at a directory ("volume")."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name)
+
+    # -- pytrees (params, optimizer states) --------------------------------
+    def save_tree(self, name: str, tree: Any, meta: Optional[dict] = None) -> str:
+        flat = _flatten(tree)
+        path = self._path(f"{name}.npz")
+        np.savez(path, **flat)
+        record = {"name": name, "kind": "tree", "hash": tree_hash(tree),
+                  "time": time.time(), "meta": meta or {},
+                  "leaves": len(flat)}
+        with open(self._path(f"{name}.json"), "w") as f:
+            json.dump(record, f)
+        return f"file://{path}"
+
+    def load_tree(self, name: str, like: Any) -> Any:
+        """Restore into the structure of `like` (shapes/dtypes preserved)."""
+        data = np.load(self._path(f"{name}.npz"))
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = data[key]
+            leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- json blobs (metrics, configs, pipeline specs) ----------------------
+    def save_json(self, name: str, obj: Any) -> str:
+        path = self._path(f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(obj, f, indent=1, default=str)
+        return f"file://{path}"
+
+    def load_json(self, name: str) -> Any:
+        with open(self._path(f"{name}.json")) as f:
+            return json.load(f)
+
+    def exists(self, name: str) -> bool:
+        return os.path.exists(self._path(f"{name}.json")) or os.path.exists(
+            self._path(f"{name}.npz"))
+
+    def list(self) -> list:
+        return sorted(os.listdir(self.root))

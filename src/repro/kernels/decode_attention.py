@@ -1,0 +1,92 @@
+"""Single-token GQA decode attention Pallas kernel (the decode_32k /
+long_500k hot spot).
+
+One new query token per sequence attends over a long, padded KV cache.
+Tiling: grid = (batch, kv_heads, kv_blocks); each step loads a
+(block_k, head_dim) KV tile into VMEM and updates fp32 online-softmax
+accumulators for the whole GQA *group* of queries at once ((group, d) tile),
+so the MXU sees a (group x block_k) matmul instead of a vector dot.
+Valid cache lengths arrive via scalar prefetch (SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, n_kv_blocks: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # (group, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                 # (bk, d)
+    s = q @ k.T                                               # (group, bk)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[ib], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v_ref[0, :, 0, :].astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, scale: float | None = None,
+                     block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B,Hq,D); caches: (B,S,Hkv,D); cache_len: (B,) int32 -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = max(hq // hkv, 1)
+    scale_ = scale if scale is not None else d ** -0.5
+    bk = min(block_k, s)
+    pad_k = (-s) % bk
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nk = k_cache.shape[1] // bk
+    qg = q.reshape(b, hkv, group, d)
+    kernel = functools.partial(_decode_kernel, scale=scale_, block_k=bk, n_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda ib, ih, ik, lens: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik, lens: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik, lens: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda ib, ih, ik, lens: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)

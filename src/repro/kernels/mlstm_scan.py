@@ -1,0 +1,96 @@
+"""Chunked mLSTM (xLSTM matrix-memory) Pallas kernel.
+
+Same TPU mapping as ssm_scan: grid = (batch, heads, chunks) with chunks
+innermost/sequential; the stabilised (C, n, m) carry lives in VMEM scratch;
+within a chunk the recurrence becomes (T,T)/(T,D) MXU matmuls.  Matches
+kernels.ref.mlstm_scan_ref (y is stabiliser-invariant) and the jnp twin
+models/ssm._mlstm_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, y_ref,
+                  c_ref, n_ref, m_ref, *, chunk: int, d: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    qs = q_ref[0, :, 0, :].astype(jnp.float32) * (d ** -0.5)      # (T,D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    li = li_ref[0, :, 0].astype(jnp.float32)                      # (T,)
+    lf = lf_ref[0, :, 0].astype(jnp.float32)
+    C, nv, m = c_ref[...], n_ref[0], m_ref[0, 0]
+
+    bcum = jnp.cumsum(lf)                                         # (T,)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    wlog = jnp.where(t_idx >= s_idx,
+                     bcum[:, None] - bcum[None, :] + li[None, :], NEG)
+    glog = bcum + m                                               # (T,)
+    m_row = jnp.maximum(jnp.max(wlog, axis=1), glog)
+    wexp = jnp.exp(wlog - m_row[:, None])
+    gexp = jnp.exp(glog - m_row)
+
+    scores = (qs @ k.T) * wexp                                    # (T,T)
+    y_intra = scores @ v
+    y_state = gexp[:, None] * (qs @ C.T)                          # C[d,e]: q over e
+    nq = jnp.sum(scores, axis=1) + gexp * (qs @ nv)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_row))
+    y_ref[0, :, 0, :] = ((y_intra + y_state) / denom[:, None]).astype(y_ref.dtype)
+
+    # carry update, restabilised at m_new
+    m_new = jnp.maximum(bcum[-1] + m, jnp.max(li + (bcum[-1] - bcum)))
+    c_decay = jnp.exp(bcum[-1] + m - m_new)
+    inj = jnp.exp(li + (bcum[-1] - bcum) - m_new)                 # (T,)
+    c_ref[...] = C * c_decay + (v * inj[:, None]).T @ k           # (D,D)
+    n_ref[0] = nv * c_decay + jnp.sum(k * inj[:, None], axis=0)
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_scan(q, k, v, logi, logf, *, chunk: int = 128, interpret: bool = True):
+    """q,k,v: (B,S,H,D); logi/logf: (B,S,H) (log-space gates). -> y (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t = min(chunk, s)
+    pad = (-s) % t
+    if pad:
+        zp4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zp4) for a in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // t
+    kernel = functools.partial(_mlstm_kernel, chunk=t, d=d)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, t, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, t, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, t, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, t, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, t, 1), lambda ib, ih, ic: (ib, ic, ih)),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, logi, logf)
+    return y[:, :s] if pad else y

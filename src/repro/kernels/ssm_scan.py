@@ -1,0 +1,102 @@
+"""Chunked SSD (Mamba2) scan Pallas kernel, used by the xlstm/zamba2 paths.
+
+TPU adaptation of the GPU SSD algorithm: instead of warp-level prefix scans,
+the sequence is blocked into VMEM-resident chunks of length T; within a
+chunk the recurrence is re-expressed as dense (T x T) / (T x N) matmuls (MXU
+work), and the (P x N) state is carried across chunks in VMEM scratch --
+grid = (batch, heads, chunks) with chunks innermost/sequential.
+
+Math per chunk (a_t = exp(A*dt_t), cum_t = cumsum(log a)):
+  y_t = exp(cum_t) * (C_t . h_in) + sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+  h_out = exp(cum_T) h_in + sum_s exp(cum_T - cum_s) dt_s (x_s outer B_s)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (T, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (T,)
+    a = a_ref[0]                                     # scalar decay rate (<0)
+    bm = b_ref[0].astype(jnp.float32)                # (T, N)
+    cm = c_ref[0].astype(jnp.float32)                # (T, N)
+    h = h_ref[...]                                   # (P, N) f32 carry
+
+    log_a = a * dt                                   # (T,)
+    cum = jnp.cumsum(log_a)                          # (T,)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # L[t,s] = exp(cum_t - cum_s) for s<=t else 0 (mask exponent pre-exp to
+    # avoid overflow in the dead upper triangle)
+    L = jnp.exp(jnp.where(t_idx >= s_idx, cum[:, None] - cum[None, :], -1e30))
+    G = cm @ bm.T                                    # (T, T)
+    M = G * L * dt[None, :]
+    y_intra = M @ x                                  # (T, P)
+    y_state = jnp.exp(cum)[:, None] * (cm @ h.T)     # (T, P)
+    y_ref[0, :, 0, :] = (y_intra + y_state).astype(y_ref.dtype)
+
+    w = dt * jnp.exp(cum[-1] - cum)                  # (T,)
+    h_new = h * jnp.exp(cum[-1]) + jnp.einsum("tp,tn->pn", x * w[:, None], bm)
+    h_ref[...] = h_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 256, interpret: bool = True):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N) fp32).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    t = min(chunk, s)
+    pad = (-s) % t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> identity steps
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // t
+    kernel = functools.partial(_ssd_kernel, chunk=t, n_chunks=nc)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, t, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, t, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, t, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, t, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    if pad:
+        y = y[:, :s]
+    return y, h_final

@@ -1,0 +1,223 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with NO real allocation
+(ShapeDtypeStruct stand-ins everywhere, params included via eval_shape).
+
+MUST run as a module entry point (python -m repro.launch.dryrun ...): the
+XLA_FLAGS below are read at first jax init, so they are set before ANY other
+import.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import functools     # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import registry                    # noqa: E402
+from ..models import lm, sharding as msh, steps   # noqa: E402
+from ..optim import adamw                         # noqa: E402
+from . import mesh as mesh_mod, roofline, shardings  # noqa: E402
+
+
+def _shape_cfg(cfg, shape):
+    """Shape-specific config: bf16 compute; decode budget; unrolled scans so
+    cost_analysis sees true totals (XLA counts while bodies once); chunked
+    time-scans widened so the unrolled chunk count stays ~16."""
+    cfg = cfg.replace(dtype="bfloat16", scan_unroll=True)
+    if shape.kind == "decode":
+        cfg = cfg.replace(max_decode_len=shape.seq_len)
+    if cfg.family in ("ssm", "hybrid") and shape.kind in ("train", "prefill"):
+        # layer scans unroll; time-chunk scans stay rolled (compile-time
+        # bound) and are analytically corrected in roofline terms
+        cfg = cfg.replace(chunk_unroll=False)
+    return cfg
+
+
+def build_lowering(cfg, shape, mesh, *, zero1=False, donate=True,
+                   min_relocate_bytes=0):
+    """Returns (lowered, chips). Must be called under msh.use_mesh(mesh)."""
+    param_spec = steps.params_spec(cfg)
+    param_sh = msh.param_shardings(param_spec, mesh,
+                                   min_relocate_bytes=min_relocate_bytes)
+
+    if shape.kind == "train":
+        opt_spec = steps.opt_state_spec(param_spec)
+        opt_sh = shardings.opt_shardings(opt_spec, param_spec, mesh, zero1=zero1)
+        bspec = steps.batch_spec(cfg, shape.global_batch, shape.seq_len, train=True)
+        batch_sh = shardings.batch_shardings(bspec, mesh)
+        fn = functools.partial(steps.train_step, cfg=cfg)
+        jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(param_spec, opt_spec, bspec)
+
+    if shape.kind == "prefill":
+        bspec = steps.batch_spec(cfg, shape.global_batch, shape.seq_len, train=False)
+        batch_sh = shardings.batch_shardings(bspec, mesh)
+        fn = functools.partial(steps.prefill, cfg=cfg, cache_len=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+        return jitted.lower(param_spec, bspec)
+
+    # decode: ONE token against a seq_len cache
+    tok_spec, pos_spec, cache_spec = steps.decode_specs(
+        cfg, shape.global_batch, shape.seq_len)
+    cache_sh = shardings.cache_shardings(cache_spec, mesh)
+    bsh = shardings.batch_shardings({"t": tok_spec, "p": pos_spec}, mesh)
+    fn = functools.partial(steps.serve_step, cfg=cfg)
+    jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh, bsh["t"], bsh["p"]),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,) if donate else ())
+    return jitted.lower(param_spec, cache_spec, tok_spec, pos_spec)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, zero1=False,
+            fused_attn=False, profile="tp", remat=False, tag="",
+            expert_pad=0, min_relocate_bytes=0, serve_bf16=False,
+            ssm_chunk=0) -> dict:
+    cfg = registry.get_config(arch)
+    shape = registry.INPUT_SHAPES[shape_name]
+    ok, reason = registry.runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    cfg = _shape_cfg(cfg, shape)
+    if zero1:
+        cfg = cfg.replace(zero1=True)
+    if fused_attn:
+        cfg = cfg.replace(fused_attention=True)
+    if remat:
+        cfg = cfg.replace(remat=True)
+    if profile != "tp":
+        cfg = cfg.replace(sharding_profile=profile)
+    if expert_pad:
+        cfg = cfg.replace(expert_pad_to=expert_pad)
+    if ssm_chunk:
+        cfg = cfg.replace(ssm_chunk=ssm_chunk)
+    if serve_bf16 and shape.kind != "train":
+        # deployment artifact: serving reads bf16 weights (no optimizer, no
+        # master copy) -- halves weight traffic + kills convert copies (C2)
+        cfg = cfg.replace(param_dtype="bfloat16")
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    try:
+        with msh.use_profile(cfg.sharding_profile), msh.use_mesh(mesh):
+            t0 = time.time()
+            lowered = build_lowering(cfg, shape, mesh, zero1=zero1,
+                                     min_relocate_bytes=min_relocate_bytes)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        scan_fix = (roofline.slstm_correction_flops(
+            cfg, shape.kind, shape.global_batch, shape.seq_len)
+            + roofline.chunk_scan_correction_flops(
+                cfg, shape.kind, shape.global_batch, shape.seq_len)) / chips
+        flops += scan_fix
+        hlo_text = compiled.as_text()
+        coll = roofline.collective_bytes(hlo_text)
+        terms = roofline.roofline(flops, byts, coll["total_bytes"], chips)
+        fused_bytes = roofline.fusion_modeled_bytes(hlo_text)
+        mf = roofline.model_flops(cfg, shape.kind, shape.global_batch, shape.seq_len)
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+        except Exception as e:                                   # CPU backend gaps
+            mem = {"error": str(e)}
+        rec.update(
+            status="ok", chips=chips, lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            roofline=terms.as_dict(),
+            memory_fused_s=fused_bytes / 819e9,
+            bytes_fused_model=fused_bytes,
+            collectives=coll,
+            model_flops=mf,
+            useful_flops_ratio=(mf / (flops * chips) if flops else None),
+            memory_analysis=mem,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}")
+    return rec
+
+
+def matrix(mesh_kinds):
+    for arch in registry.list_archs():
+        for shape_name in registry.INPUT_SHAPES:
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(registry.INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero1", action="store_true", help="ZeRO-1 optimizer sharding")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="chunked online-softmax attention (perf variant)")
+    ap.add_argument("--remat", action="store_true", help="activation ckpt")
+    ap.add_argument("--profile", default="tp", choices=("tp", "dp"),
+                    help="sharding profile (dp = pure data-parallel)")
+    ap.add_argument("--expert-pad", type=int, default=0,
+                    help="pad expert count to enable expert-parallel dispatch")
+    ap.add_argument("--min-relocate-bytes", type=int, default=0,
+                    help="replicate (not relocate) params smaller than this")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="bf16 weight artifact for prefill/decode (C2)")
+    ap.add_argument("--ssm-chunk", type=int, default=0,
+                    help="override SSD/mLSTM chunk length (perf sweep)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        failures = 0
+        for arch, shape_name, mk in matrix(mesh_kinds):
+            tag = f"_{args.tag}" if args.tag else ""
+            path = os.path.join(args.out, f"{arch}_{shape_name}_{mk}{tag}.json")
+            if os.path.exists(path):
+                print(f"skip (exists): {path}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                   "--shape", shape_name, "--mesh", mk, "--out", args.out]
+            if args.zero1:
+                cmd.append("--zero1")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            r = subprocess.run(cmd)
+            failures += (r.returncode != 0)
+        sys.exit(1 if failures else 0)
+
+    rec = run_one(args.arch, args.shape, mesh_kinds[0], zero1=args.zero1,
+                  fused_attn=args.fused_attn, profile=args.profile,
+                  remat=args.remat, tag=args.tag, expert_pad=args.expert_pad,
+                  min_relocate_bytes=args.min_relocate_bytes,
+                  serve_bf16=args.serve_bf16, ssm_chunk=args.ssm_chunk)
+    tag = f"_{args.tag}" if args.tag else ""
+    path = os.path.join(args.out, f"{args.arch}_{args.shape}_{mesh_kinds[0]}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: rec[k] for k in rec if k not in ("collectives", "memory_analysis")},
+                     indent=1))
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

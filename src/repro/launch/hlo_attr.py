@@ -1,0 +1,101 @@
+"""HLO byte attribution: parse a compiled module's text and rank ops by
+output-buffer size (proxy for HBM traffic) grouped by op kind and by shape.
+
+  python -m repro.launch.hlo_attr --arch X --shape Y [--fused-attn ...]
+prints the top-N op kinds and top-N individual shapes.  Used by the §Perf
+iterations to find where the memory term actually lives.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse        # noqa: E402
+import collections     # noqa: E402
+import re              # noqa: E402
+
+from ..configs import registry                    # noqa: E402
+from ..models import sharding as msh              # noqa: E402
+from . import dryrun, mesh as mesh_mod, roofline  # noqa: E402
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*(.+?)\s*([\w-]+)\(")
+
+
+def attribute(hlo_text: str, top: int = 25, fused_model: bool = True):
+    """Rank ops by output bytes.  fused_model=True applies the same filter
+    as roofline.fusion_modeled_bytes (entry params + materialising ops in
+    non-fusion computations), so the ranking explains that metric."""
+    by_kind: dict = collections.Counter()
+    by_shape: dict = collections.Counter()
+    in_fusion = in_entry = False
+    depth = 0
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        hdr = roofline._COMP_HDR.match(line.strip()) \
+            if line.strip().endswith("{") else None
+        if hdr and depth == 0:
+            name = hdr.group(2)
+            in_fusion = "fused" in name or "region" in name
+            in_entry = bool(hdr.group(1))
+            depth = 1
+            continue
+        if depth and line.strip() == "}":
+            depth = 0
+            in_fusion = in_entry = False
+            continue
+        if fused_model and (not depth or in_fusion):
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_part, op = m.groups()
+        if fused_model:
+            if op == "parameter" and not in_entry:
+                continue
+            if op not in roofline._MATERIALIZING and op != "fusion" \
+               and op != "parameter":
+                continue
+        nbytes = roofline._shape_bytes(type_part)
+        if nbytes <= 0:
+            continue
+        by_kind[op] += nbytes
+        key = f"{op}:{type_part.strip()[:70]}"
+        by_shape[key] += nbytes
+    return by_kind, by_shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--fused-attn", action="store_true")
+    ap.add_argument("--profile", default="tp")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    shape = registry.INPUT_SHAPES[args.shape]
+    cfg = dryrun._shape_cfg(cfg, shape)
+    if args.fused_attn:
+        cfg = cfg.replace(fused_attention=True)
+    if args.profile != "tp":
+        cfg = cfg.replace(sharding_profile=args.profile)
+    if args.zero1:
+        cfg = cfg.replace(zero1=True)
+    mesh = mesh_mod.make_production_mesh(multi_pod=(args.mesh == "multi"))
+    with msh.use_profile(cfg.sharding_profile), msh.use_mesh(mesh):
+        compiled = dryrun.build_lowering(cfg, shape, mesh,
+                                         zero1=args.zero1).compile()
+    by_kind, by_shape = attribute(compiled.as_text())
+    total = sum(by_kind.values())
+    print(f"total output-buffer bytes (per device): {total / 1e12:.2f} TB")
+    print("\n== by op kind ==")
+    for op, b in by_kind.most_common(args.top):
+        print(f"  {op:30s} {b / 1e12:8.3f} TB  ({100 * b / total:4.1f}%)")
+    print("\n== top shapes ==")
+    for key, b in by_shape.most_common(args.top):
+        print(f"  {b / 1e12:8.3f} TB  {key}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  python -m repro.launch.report [--dir experiments/dryrun] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dryrun_dir: str, mesh: str, tag: str = "") -> list[dict]:
+    recs = []
+    suffix = f"_{mesh}{('_' + tag) if tag else ''}.json"
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*{suffix}"))):
+        base = os.path.basename(path)[: -len(suffix)]
+        with open(path) as f:
+            rec = json.load(f)
+        if tag == "" and any(base.endswith(x) for x in ("_zero1", "_opt")):
+            continue
+        recs.append(rec)
+    return recs
+
+
+def _fmt(x, digits=4):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}g}"
+
+
+def roofline_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+           "bound_s | dominant | useful_ratio | collectives (AR/AG/RS/A2A/CP) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped "
+                         f"({r['reason'][:40]}...) |" + " - |" * 7)
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR |" + " - |" * 7)
+            continue
+        t = r["roofline"]
+        c = r["collectives"]["per_kind_counts"]
+        counts = "/".join(str(c.get(k, 0)) for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {_fmt(t['compute_s'])} | "
+            f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+            f"{_fmt(t['bound_s'])} | **{t['dominant']}** | "
+            f"{_fmt(r.get('useful_flops_ratio'), 3)} | {counts} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | status | chips | lower_s | compile_s | "
+           "flops/chip | bytes/chip | coll_bytes/chip |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} |"
+                         + " - |" * 6)
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['chips']} | "
+            f"{r['lower_s']} | {r['compile_s']} | {_fmt(t['flops'], 4)} | "
+            f"{_fmt(t['bytes_accessed'], 4)} | {_fmt(t['coll_bytes'], 4)} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kind", choices=("roofline", "dryrun"), default="roofline")
+    args = ap.parse_args(argv)
+    recs = load(args.dir, args.mesh, args.tag)
+    print((roofline_table if args.kind == "roofline" else dryrun_table)(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Input/cache/optimizer sharding specs for the jit boundaries.
+
+Params use models.sharding rule tables; this module covers everything else:
+data batches (batch dim over pod+data), decode caches (batch over pod+data,
+heads/state over model), optimizer state (params' spec, optionally ZeRO-1
+sharded over data).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import sharding as msh
+
+
+def _axes(mesh: Mesh, logical) -> Any:
+    mesh_axes = msh._axis_table().get(logical, (logical,) if logical else None)
+    if mesh_axes is None:
+        return None
+    present = tuple(a for a in mesh_axes if a in mesh.axis_names)
+    return present if len(present) > 1 else (present[0] if present else None)
+
+
+def _batch_ways(mesh: Mesh) -> int:
+    ax = _axes(mesh, "batch")
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(batch_spec: Any, mesh: Mesh) -> Any:
+    """Every batch leaf: dim0 = batch over (pod, data); small batches
+    (long_500k b=1) stay unsharded rather than GSPMD-padding 32x."""
+    ways = _batch_ways(mesh)
+
+    def f(leaf):
+        ax = _axes(mesh, "batch") if leaf.shape and leaf.shape[0] % ways == 0 else None
+        spec = (ax,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(f, batch_spec)
+
+
+# cache leaf key -> logical spec tail (after the leading group-stack dim and
+# the batch dim, which are fixed (None, batch)).
+_CACHE_RULES = {
+    "k": (None, "model", None),        # (G,B,S,Hkv,hd)
+    "v": (None, "model", None),
+    "cross_k": (None, "model", None),
+    "cross_v": (None, "model", None),
+    "c_kv": (None, None),              # (G,B,S,r) MLA compressed: replicated tail
+    "k_rope": (None, None),
+    "ssm": ("model", None, None),      # (G,B,H,P,N)
+    "conv": (None, "model"),           # (G,B,k,conv_dim)
+    "C": ("model", None, None),        # (G,B,H,hd,hd) mlstm
+    "n": ("model", None),
+    "m": ("model",),
+    "c": ("model", None),              # slstm
+    "h": ("model", None),
+}
+
+
+def cache_shardings(cache_spec: Any, mesh: Mesh) -> Any:
+    ways = _batch_ways(mesh)
+
+    def f(path, leaf):
+        key = None
+        for p in reversed(path):
+            name = getattr(p, "key", None)
+            if isinstance(name, str):
+                key = name
+                break
+        ndim = len(leaf.shape)
+        if key == "enc_len":
+            ax = _axes(mesh, "batch") if leaf.shape[0] % ways == 0 else None
+            return NamedSharding(mesh, P(ax))
+        tail = _CACHE_RULES.get(key, ())
+        tail = tail[:max(ndim - 2, 0)]
+        tail = tail + (None,) * (ndim - 2 - len(tail))
+        batch_ax = _axes(mesh, "batch") if ndim >= 2 and leaf.shape[1] % ways == 0 else None
+        spec = (None, batch_ax) + tuple(_axes(mesh, t) for t in tail)
+        fitted = msh.fit_pspec(tuple(leaf.shape), P(*spec[:ndim]), mesh, relocate=False)
+        return NamedSharding(mesh, fitted)
+    return jax.tree_util.tree_map_with_path(f, cache_spec)
+
+
+def opt_shardings(opt_spec: Any, params_spec_tree: Any, mesh: Mesh,
+                  *, zero1: bool = False) -> Any:
+    """mu/nu follow the param sharding; ZeRO-1 additionally shards the first
+    unsharded dim over the data axis."""
+    param_sh = msh.param_shardings(params_spec_tree, mesh)
+
+    def zero_ify(sh: NamedSharding, leaf):
+        if not zero1 or "data" not in mesh.axis_names:
+            return sh
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        data_n = mesh.shape["data"]
+        for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+            if ax is None and dim >= data_n and dim % data_n == 0:
+                spec[i] = "data"
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    mu = jax.tree_util.tree_map(zero_ify, param_sh, params_spec_tree)
+    return {"mu": mu, "nu": mu, "step": NamedSharding(mesh, P())}

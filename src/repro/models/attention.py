@@ -1,0 +1,344 @@
+"""Attention variants: GQA (+RoPE / M-RoPE / sliding window), MLA (deepseek),
+cross-attention (whisper).  Pure functions over param dicts.
+
+Decode ("serve_step") semantics: ONE new token per sequence against a KV
+cache of length cfg.max_decode_len.  Sliding-window ("local") layers use a
+ring-buffer cache of size min(window, max_decode_len) -- correct because
+post-RoPE attention is permutation-invariant over keys, so ring order does
+not matter once positions are baked in at write time.
+
+MLA keeps the *compressed* cache (c_kv, k_rope) and decodes in the absorbed
+form (q folded through w_uk / output through w_uv) -- the memory win the
+paper's MLA citation exists for.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from . import modules as nn
+from .sharding import constrain
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B,S,H,D); positions: (B,S) -> rotated x (half-split convention)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (B,S,D/2)
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Qwen2-VL M-RoPE: positions (B,3,S) = (t,h,w) streams; the rotary
+    frequency dims are split into 3 sections, one per stream."""
+    d = x.shape[-1]
+    half = d // 2
+    s1 = half - 2 * (half // 3)
+    sections = [s1, half // 3, half // 3]
+    freqs = rope_freqs(d, theta)
+    pos_f = positions.astype(jnp.float32)                          # (B,3,S)
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        ang = pos_f[:, i, :, None] * freqs[start:start + sec]      # (B,S,sec)
+        parts.append(ang)
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)                       # (B,S,D/2)
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _rope(x, positions, cfg: ArchConfig):
+    if not cfg.use_rope:
+        return x
+    if cfg.use_mrope:
+        return apply_mrope(x, positions, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _tpos(positions, cfg: ArchConfig):
+    """Temporal (1D) position stream -- for cache indexing under M-RoPE."""
+    return positions[:, 0] if cfg.use_mrope else positions
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = nn.split_keys(key, 4)
+    return {
+        "wq": nn.dense_init(k1, (d, hq, hd), fan_in=d, dtype=dtype),
+        "wk": nn.dense_init(k2, (d, hkv, hd), fan_in=d, dtype=dtype),
+        "wv": nn.dense_init(k3, (d, hkv, hd), fan_in=d, dtype=dtype),
+        "wo": nn.dense_init(k4, (hq, hd, d), fan_in=hq * hd, dtype=dtype),
+    }
+
+
+def gqa_forward(p: Params, x: jax.Array, positions: jax.Array, cfg: ArchConfig,
+                *, window: int = 0, causal: bool = True,
+                return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B,S,D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(_rope(q, positions, cfg), "batch", None, "model")
+    k = constrain(_rope(k, positions, cfg), "batch", None, "model")
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            use_kernel=cfg.use_kernels,
+                            chunked=cfg.fused_attention,
+                            chunk_k=cfg.attn_chunk,
+                            unroll=cfg.scan_unroll if cfg.chunk_unroll is None
+                            else cfg.chunk_unroll)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = constrain(out, "batch", None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
+               cfg: ArchConfig, *, window: int = 0):
+    """One-token decode. x: (B,1,D); cache {k,v:(B,S,Hkv,hd)}; positions (B,)
+    or (B,3) absolute positions of the new token.  Returns (out, new_cache)."""
+    b = x.shape[0]
+    # positions for rope helpers expect (B,S) or (B,3,S)
+    pos_seq = positions[:, None] if not cfg.use_mrope else positions[:, :, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = _rope(q, pos_seq, cfg)[:, 0]                               # (B,Hq,hd)
+    k = _rope(k, pos_seq, cfg)[:, 0]                               # (B,Hkv,hd)
+    v = v[:, 0]
+    tpos = _tpos(pos_seq, cfg)[:, 0]                               # (B,) int
+    cache_size = cache["k"].shape[1]
+    if window > 0:                      # ring-buffer cache for local layers
+        size = min(window, cache_size)
+        slot = tpos % size
+        eff_len = jnp.minimum(tpos + 1, size)
+    else:
+        slot = tpos
+        eff_len = tpos + 1
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+    o = ops.decode_attention(q, k_cache, v_cache, eff_len.astype(jnp.int32),
+                             use_kernel=cfg.use_kernels)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_decode_stacked(p: Params, x: jax.Array, stacked: dict, g: int,
+                       positions: jax.Array, cfg: ArchConfig, *, window: int = 0):
+    """One-token decode writing DIRECTLY into the layer-stacked cache
+    (G,B,S,Hkv,hd) via dynamic-update-slice -- no per-layer slice copy and
+    no post-scan restack (EXPERIMENTS.md §Perf C3: the functional per-layer
+    update cost two full cache copies per step)."""
+    b = x.shape[0]
+    pos_seq = positions[:, None] if not cfg.use_mrope else positions[:, :, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = _rope(q, pos_seq, cfg)[:, 0]
+    k = _rope(k, pos_seq, cfg)[:, 0]
+    v = v[:, 0]
+    tpos = _tpos(pos_seq, cfg)[:, 0]
+    cache_size = stacked["k"].shape[2]
+    if window > 0:
+        size = min(window, cache_size)
+        slot = tpos % size
+        eff_len = jnp.minimum(tpos + 1, size)
+    else:
+        slot = tpos
+        eff_len = tpos + 1
+    bidx = jnp.arange(b)
+    k_st = stacked["k"].at[g, bidx, slot].set(k.astype(stacked["k"].dtype))
+    v_st = stacked["v"].at[g, bidx, slot].set(v.astype(stacked["v"].dtype))
+    o = ops.decode_attention(q, k_st[g], v_st[g], eff_len.astype(jnp.int32),
+                             use_kernel=cfg.use_kernels)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    new = dict(stacked, k=k_st, v=v_st)
+    return out, new
+
+
+def mla_decode_stacked(p: Params, x: jax.Array, stacked: dict, g: int,
+                       positions: jax.Array, cfg: ArchConfig):
+    """Absorbed-form MLA decode over the stacked compressed cache (§Perf C3)."""
+    b = x.shape[0]
+    r = cfg.kv_lora_rank
+    pos_seq = positions[:, None]
+    c = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_new, krope_new = c[..., :r][:, 0], c[..., r:]
+    krope_new = apply_rope(krope_new[:, :, None, :], pos_seq, cfg.rope_theta)[:, 0, 0]
+    bidx = jnp.arange(b)
+    ckv_st = stacked["c_kv"].at[g, bidx, positions].set(
+        c_new.astype(stacked["c_kv"].dtype))
+    krope_st = stacked["k_rope"].at[g, bidx, positions].set(
+        krope_new.astype(stacked["k_rope"].dtype))
+    c_kv, k_rope = ckv_st[g], krope_st[g]
+
+    q_nope = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"])[:, 0]
+    q_rope = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["w_qr"]), pos_seq,
+                        cfg.rope_theta)[:, 0]
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"])
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhk,bsk->bhs", q_rope.astype(k_rope.dtype), k_rope,
+                           preferred_element_type=jnp.float32)) * _mla_scale(cfg)
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= positions[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", probs.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhr,rhk->bhk", o_c.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, dict(stacked, c_kv=ckv_st, k_rope=krope_st)
+
+
+def gqa_cache_shape(cfg: ArchConfig, batch: int, length: int, window: int = 0):
+    size = min(window, length) if window > 0 else length
+    kv = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": kv, "v": kv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_init(key, cfg: ArchConfig, dtype) -> Params:
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_forward(p: Params, x: jax.Array, enc_kv: tuple, cfg: ArchConfig):
+    """x: (B,S,D); enc_kv = (k,v) precomputed from encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = enc_kv
+    o = ops.flash_attention(q, k, v, causal=False, use_kernel=cfg.use_kernels)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_kv(p: Params, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def cross_decode(p: Params, x: jax.Array, enc_kv: tuple, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]              # (B,H,hd)
+    k, v = enc_kv
+    lens = jnp.full((x.shape[0],), k.shape[1], jnp.int32)
+    o = ops.decode_attention(q, k, v, lens, use_kernel=cfg.use_kernels)
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank compressed KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, hq = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = nn.split_keys(key, 6)
+    return {
+        "w_uq": nn.dense_init(ks[0], (d, hq, dn), fan_in=d, dtype=dtype),
+        "w_qr": nn.dense_init(ks[1], (d, hq, dr), fan_in=d, dtype=dtype),
+        "w_dkv": nn.dense_init(ks[2], (d, r + dr), fan_in=d, dtype=dtype),
+        "w_uk": nn.dense_init(ks[3], (r, hq, dn), fan_in=r, dtype=dtype),
+        "w_uv": nn.dense_init(ks[4], (r, hq, dv), fan_in=r, dtype=dtype),
+        "wo": nn.dense_init(ks[5], (hq, dv, d), fan_in=hq * dv, dtype=dtype),
+    }
+
+
+def _mla_scale(cfg: ArchConfig) -> float:
+    return (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+
+def mla_forward(p: Params, x: jax.Array, positions: jax.Array, cfg: ArchConfig,
+                *, return_cache: bool = False):
+    """Prefill/train: decompress to MHA and run flash attention."""
+    r = cfg.kv_lora_rank
+    c = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])                   # (B,S,r+dr)
+    c_kv, k_rope = c[..., :r], c[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+    q_nope = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"])
+    q_rope = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["w_qr"]), positions,
+                        cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    hq = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, q_rope.shape)], axis=-1)
+    q = constrain(q, "batch", None, "model")
+    # v head dim differs from qk dim -> pad v for the fused kernel path, or
+    # use the reference path which supports it natively.
+    dqk, dv = q.shape[-1], v.shape[-1]
+    if cfg.use_kernels and dv != dqk:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+        o = ops.flash_attention(q, k, v_p, causal=True, scale=_mla_scale(cfg),
+                                use_kernel=True)[..., :dv]
+    else:
+        o = ops.flash_attention(q, k, v, causal=True, use_kernel=False,
+                                chunked=cfg.fused_attention,
+                                chunk_k=cfg.attn_chunk,
+                                unroll=cfg.scan_unroll if cfg.chunk_unroll is None
+                                else cfg.chunk_unroll)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return out
+
+
+def mla_decode(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
+               cfg: ArchConfig):
+    """Absorbed-form decode over the compressed cache.
+
+    cache: {c_kv: (B,S,r), k_rope: (B,S,dr)}; positions: (B,) absolute."""
+    b = x.shape[0]
+    r = cfg.kv_lora_rank
+    pos_seq = positions[:, None]
+    c = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_new, krope_new = c[..., :r][:, 0], c[..., r:]
+    krope_new = apply_rope(krope_new[:, :, None, :], pos_seq, cfg.rope_theta)[:, 0, 0]
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, positions].set(c_new.astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, positions].set(krope_new.astype(cache["k_rope"].dtype))
+
+    q_nope = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"])[:, 0]       # (B,H,dn)
+    q_rope = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["w_qr"]), pos_seq,
+                        cfg.rope_theta)[:, 0]                      # (B,H,dr)
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"])          # absorbed q
+    # scores over the compressed cache: native-dtype dots + f32 accumulation
+    # (an .astype(f32) here would materialise an f32 copy of the WHOLE cache
+    # per layer -- the dominant byte term of the decode baseline, §Perf C1)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhk,bsk->bhs", q_rope.astype(k_rope.dtype), k_rope,
+                           preferred_element_type=jnp.float32)) * _mla_scale(cfg)
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= positions[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", probs.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)               # (B,H,r)
+    o = jnp.einsum("bhr,rhk->bhk", o_c.astype(x.dtype), p["w_uv"])     # (B,H,dv)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_shape(cfg: ArchConfig, batch: int, length: int):
+    return {"c_kv": (batch, length, cfg.kv_lora_rank),
+            "k_rope": (batch, length, cfg.qk_rope_dim)}

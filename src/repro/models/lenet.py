@@ -1,0 +1,54 @@
+"""LeNet-style MNIST classifier in pure JAX (the paper's Katib model:
+"docker.io/liuhougangxa/tf-estimator-mnist uses LeNet").
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import modules as nn
+
+Params = Any
+
+
+def init_params(key, *, width: int = 16) -> Params:
+    ks = nn.split_keys(key, 4)
+    return {
+        "conv1": {"w": nn.dense_init(ks[0], (5, 5, 1, width), fan_in=25),
+                  "b": jnp.zeros((width,))},
+        "conv2": {"w": nn.dense_init(ks[1], (5, 5, width, width * 2), fan_in=25 * width),
+                  "b": jnp.zeros((width * 2,))},
+        "fc1": {"w": nn.dense_init(ks[2], (7 * 7 * width * 2, 128)),
+                "b": jnp.zeros((128,))},
+        "fc2": {"w": nn.dense_init(ks[3], (128, 10)), "b": jnp.zeros((10,))},
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def apply(params: Params, images: jax.Array) -> jax.Array:
+    """images: (B,28,28,1) -> logits (B,10)."""
+    x = jax.nn.relu(_conv(images, params["conv1"]["w"], params["conv1"]["b"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params: Params, batch: dict):
+    logits = apply(params, batch["image"])
+    labels = batch["label"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,309 @@
+"""Full language models (+ whisper enc-dec, qwen2-vl vision merge).
+
+Three pure entry points used by steps.py / launch:
+  init_params(key, cfg)                     -> params pytree (eval_shape-able)
+  forward(params, cfg, batch, collect_cache)-> (logits, aux, cache|None)
+  decode_step(params, cfg, token, positions, cache) -> (logits, new_cache)
+plus init_cache(cfg, batch) building zeroed decode caches.
+
+`batch` keys: tokens (B,S) int32; optional vision_embeds (B,n_vis,D),
+mrope_positions (B,3,S), frames (B,enc_len,D) for audio.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import blocks
+from . import modules as nn
+from .sharding import constrain
+
+Params = Any
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """positions: (B,S) -> (B,S,D) classic transformer sinusoid."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    plan = blocks.build_plan(cfg)
+    keys = nn.split_keys(key, 6 + len(plan))
+    p: dict = {
+        "embed": nn.dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                               fan_in=cfg.d_model, dtype=dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                     fan_in=cfg.d_model, dtype=dtype)
+    cross = cfg.family == "audio"
+    for pi, phase in enumerate(plan):
+        pk = nn.split_keys(keys[2 + pi], phase.n_groups)
+        groups = []
+        for g in range(phase.n_groups):
+            gk = nn.split_keys(pk[g], len(phase.kinds))
+            groups.append({
+                f"slot{j}": blocks.slot_init(gk[j], cfg, kind, ffn, dtype, cross=cross)
+                for j, (kind, ffn) in enumerate(zip(phase.kinds, phase.ffns))
+            })
+        p[f"phase{pi}"] = nn.stack_layers(groups)
+    if cfg.family == "hybrid":          # zamba2 tied shared attn+MLP block
+        p["shared"] = blocks.slot_init(keys[-2], cfg, "global", "mlp", dtype)
+    if cfg.family == "audio":           # whisper encoder stack
+        ek = nn.split_keys(keys[-1], cfg.encoder_layers)
+        p["encoder"] = nn.stack_layers([
+            blocks.slot_init(ek[i], cfg, "global", "mlp", dtype)
+            for i in range(cfg.encoder_layers)])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+def _embed(params, cfg: ArchConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return x
+
+
+def _head(params, cfg: ArchConfig, x):
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"].astype(x.dtype))
+    return jnp.einsum("...d,dv->...v", x, params["lm_head"].astype(x.dtype))
+
+
+def _encoder(params, cfg: ArchConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(cfg.compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None], frames.shape[:2])
+    x = x + sinusoid(pos, cfg.d_model).astype(x.dtype)
+
+    def body(carry, gp):
+        h = carry
+        mix = attn.gqa_forward(gp["mixer"], nn.rms_norm(h, gp["norm1"], cfg.norm_eps),
+                               pos, cfg, causal=False)
+        h = h + mix
+        h = h + blocks.mlp_forward(gp["ffn"], nn.rms_norm(h, gp["norm2"], cfg.norm_eps), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return x
+
+
+def _positions_for(cfg: ArchConfig, batch) -> jax.Array:
+    tokens = batch["tokens"]
+    if cfg.use_mrope:
+        return batch["mrope_positions"]
+    b, s = tokens.shape
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _inputs(params, cfg: ArchConfig, batch):
+    x = _embed(params, cfg, batch["tokens"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        x = x.at[:, :nv].set(batch["vision_embeds"].astype(x.dtype))
+    if cfg.family == "audio":
+        b, s = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = x + sinusoid(pos, cfg.d_model).astype(x.dtype)
+    return constrain(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ArchConfig, batch, *, collect_cache: bool = False,
+            cache_len: int = 0):
+    """Returns (logits (B,S,V), aux_loss, cache or None).
+
+    When collect_cache, KV caches are emitted padded to `cache_len`
+    (>= S) so decode can continue from the prefill."""
+    params = nn.cast_tree(params, cfg.compute_dtype)   # mixed precision
+    plan = blocks.build_plan(cfg)
+    positions = _positions_for(cfg, batch)
+    x = _inputs(params, cfg, batch)
+    enc_out = _encoder(params, cfg, batch["frames"]) if cfg.family == "audio" else None
+    aux = jnp.zeros((), jnp.float32)
+    caches: dict = {}
+
+    for pi, phase in enumerate(plan):
+        stacked = params[f"phase{pi}"]
+
+        def group_fn(carry, gp, phase=phase):
+            h, a = carry
+            gcache = {}
+            for j, (kind, ffn) in enumerate(zip(phase.kinds, phase.ffns)):
+                enc_kv = None
+                if enc_out is not None:
+                    enc_kv = attn.cross_kv(gp[f"slot{j}"]["cross"], enc_out)
+                h, c, aj = blocks.slot_forward(
+                    gp[f"slot{j}"], h, positions, cfg, kind, ffn,
+                    collect_cache=collect_cache, enc_kv=enc_kv)
+                if collect_cache:
+                    c = _pad_cache(c, kind, cfg, cache_len)
+                    if enc_kv is not None:
+                        c = dict(c, cross_k=enc_kv[0], cross_v=enc_kv[1])
+                    gcache[f"slot{j}"] = c
+                a = a + aj
+            if phase.shared_attn:
+                w = _shared_window(cfg, cache_len)
+                kind = "local" if w else "global"
+                h, c, _ = blocks.slot_forward(
+                    params["shared"], h, positions, cfg, kind, "mlp",
+                    collect_cache=collect_cache)
+                if collect_cache:
+                    gcache["shared"] = _pad_cache(c, kind, cfg, cache_len, window=w)
+            h = constrain(h, "batch", None, None)
+            return (h, a), (gcache if collect_cache else None)
+
+        body = jax.checkpoint(group_fn) if cfg.remat else group_fn
+        (x, aux), pc = jax.lax.scan(body, (x, aux), stacked,
+                                    unroll=True if cfg.scan_unroll else 1)
+        if collect_cache:
+            caches[f"phase{pi}"] = pc
+
+    logits = _head(params, cfg, x)
+    if collect_cache and cfg.family == "audio":
+        caches["enc_len"] = jnp.full((x.shape[0],), enc_out.shape[1], jnp.int32)
+    return logits, aux, (caches if collect_cache else None)
+
+
+def _shared_window(cfg: ArchConfig, cache_len: int) -> int:
+    """Zamba2 long-context adaptation: window the tied attention block when
+    the decode budget exceeds the training window (DESIGN.md)."""
+    if cfg.family == "hybrid" and cache_len and cache_len > 65536:
+        return cfg.sliding_window
+    return 0
+
+
+def _pad_cache(c: dict, kind: str, cfg: ArchConfig, cache_len: int, window: int = 0):
+    """Pad prefill-emitted kv to the decode cache length (ring-aware)."""
+    if kind not in ("global", "local", "mla") or not cache_len:
+        return c
+    if kind == "local" or window:
+        w = window or cfg.sliding_window
+        size = min(w, cache_len)
+        out = {}
+        for name in ("k", "v"):
+            kv = c[name]
+            s = kv.shape[1]
+            if s >= size:
+                # last `size` positions, placed at their ring slots
+                tail = kv[:, -size:]
+                pos = jnp.arange(s - size, s) % size
+                out[name] = jnp.zeros((kv.shape[0], size) + kv.shape[2:],
+                                      kv.dtype).at[:, pos].set(tail)
+            else:
+                out[name] = jnp.pad(kv, ((0, 0), (0, size - s)) + ((0, 0),) * (kv.ndim - 2))
+        for name in c:
+            if name not in ("k", "v"):
+                out[name] = c[name]
+        return out
+    out = {}
+    for name, kv in c.items():
+        s = kv.shape[1]
+        out[name] = kv if s >= cache_len else jnp.pad(
+            kv, ((0, 0), (0, cache_len - s)) + ((0, 0),) * (kv.ndim - 2))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cfg: ArchConfig, tokens, positions, cache):
+    """tokens: (B,1); positions: (B,) (or (B,3) M-RoPE) absolute position of
+    the new token.  Returns (logits (B,V), new_cache).
+
+    Formulation note (EXPERIMENTS.md §Perf C3, refuted): an in-place
+    variant updating the layer-STACKED cache via chained scatters
+    (blocks.slot_decode_stacked) measured 5x WORSE -- XLA lowers each
+    full-stack scatter as a whole-buffer copy.  The scan-with-ys form
+    below (slice scatter + ys restack, ~2 cache copies/step) is the
+    better-measured baseline and is kept."""
+    params = nn.cast_tree(params, cfg.compute_dtype)   # mixed precision
+    plan = blocks.build_plan(cfg)
+    x = _embed(params, cfg, tokens)
+    if cfg.family == "audio":
+        x = x + sinusoid(positions[:, None], cfg.d_model).astype(x.dtype)
+    x = constrain(x, "batch", None, None)
+    new_cache: dict = {}
+
+    for pi, phase in enumerate(plan):
+        stacked = params[f"phase{pi}"]
+        pcache = cache[f"phase{pi}"]
+
+        def group_fn(h, xs, phase=phase):
+            gp, gc = xs
+            out_c = {}
+            for j, (kind, ffn) in enumerate(zip(phase.kinds, phase.ffns)):
+                sc = dict(gc[f"slot{j}"])
+                enc_kv = None
+                if cfg.family == "audio":
+                    enc_kv = (sc.pop("cross_k"), sc.pop("cross_v"))
+                h, nc = blocks.slot_decode(gp[f"slot{j}"], h, sc, positions, cfg,
+                                           kind, ffn, enc_kv=enc_kv)
+                if enc_kv is not None:
+                    nc = dict(nc, cross_k=enc_kv[0], cross_v=enc_kv[1])
+                out_c[f"slot{j}"] = nc
+            if phase.shared_attn:
+                # window iff the cache was built windowed (ring size < budget)
+                w = cfg.sliding_window if gc["shared"]["k"].shape[1] <= cfg.sliding_window \
+                    else 0
+                kind = "local" if w else "global"
+                h, nc = blocks.slot_decode(params["shared"], h, gc["shared"],
+                                           positions, cfg, kind, "mlp")
+                out_c["shared"] = nc
+            return h, out_c
+
+        x, pc = jax.lax.scan(group_fn, x, (stacked, pcache),
+                             unroll=True if cfg.scan_unroll else 1)
+        new_cache[f"phase{pi}"] = pc
+
+    if cfg.family == "audio":
+        new_cache["enc_len"] = cache["enc_len"]
+    logits = _head(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int) -> Any:
+    """Zeroed decode caches (structure mirrors forward(collect_cache))."""
+    plan = blocks.build_plan(cfg)
+    cdt = cfg.compute_dtype
+    cache: dict = {}
+    for pi, phase in enumerate(plan):
+        pc = {}
+        for j, kind in enumerate(phase.kinds):
+            shp = blocks.slot_cache_shape(cfg, kind, batch, length)
+            dt = blocks.cache_dtypes(kind, cdt)
+            c = {k: jnp.zeros((phase.n_groups,) + v, dt) for k, v in shp.items()}
+            if cfg.family == "audio":
+                hkv, hd = cfg.n_kv_heads, cfg.head_dim
+                c["cross_k"] = jnp.zeros((phase.n_groups, batch, cfg.encoder_len, hkv, hd), cdt)
+                c["cross_v"] = jnp.zeros((phase.n_groups, batch, cfg.encoder_len, hkv, hd), cdt)
+            pc[f"slot{j}"] = c
+        if phase.shared_attn:
+            w = _shared_window(cfg, length)
+            shp = blocks.slot_cache_shape(
+                cfg, "local" if w else "global", batch, length)
+            pc["shared"] = {k: jnp.zeros((phase.n_groups,) + v, cdt)
+                            for k, v in shp.items()}
+        cache[f"phase{pi}"] = pc
+    if cfg.family == "audio":
+        cache["enc_len"] = jnp.zeros((batch,), jnp.int32)
+    return cache

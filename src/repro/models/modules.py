@@ -1,0 +1,76 @@
+"""Tiny functional param system: initializers + pytree helpers (no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+def dense_init(key, shape: Sequence[int], fan_in: int | None = None, dtype=jnp.float32):
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (LeCun-ish)."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_layers(layer_params: list[Params]) -> Params:
+    """Stack a list of identically-structured param trees along axis 0
+    (the lax.scan-over-layers representation)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def layer_slice(stacked: Params, i) -> Params:
+    """Dynamic-index layer *i* out of a stacked param tree (inside scan)."""
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params
+    )
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def swiglu(x, gate):
+    return jax.nn.silu(gate) * x
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "swiglu": swiglu,  # handled specially (two-input) in layers
+    "gelu": gelu,
+    "squared_relu": squared_relu,
+    "silu": jax.nn.silu,
+}

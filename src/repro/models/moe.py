@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch,
+expert-parallel over the mesh "model" axis.
+
+Dispatch is GShard-style *grouped*: each batch row routes its own tokens
+independently (vmap over batch), so routing never crosses the data-parallel
+axis -- the only cross-device traffic is the expert-parallel all-to-all that
+XLA SPMD inserts around the (E, C, D) expert buffers (experts sharded over
+"model").  That collective is the MoE term the roofline watches.
+
+Capacity per group: C = ceil(cf * S * top_k / E); overflowing tokens are
+dropped (contribute zero), standard Switch/GShard semantics.  The auxiliary
+load-balance loss (Switch eq. 4 generalised to top-k) is returned to the
+train loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import modules as nn
+from .sharding import constrain
+
+Params = Any
+
+
+def _epad(cfg: ArchConfig) -> int:
+    """Stored expert count: padded (dead) experts let E divide the mesh."""
+    return max(cfg.expert_pad_to, cfg.n_experts)
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, e, f = cfg.d_model, _epad(cfg), cfg.moe_d_ff
+    ks = nn.split_keys(key, 7)
+    p = {
+        "router": nn.dense_init(ks[0], (d, cfg.n_experts), fan_in=d,
+                                dtype=jnp.float32),
+        "experts_gate": nn.dense_init(ks[1], (e, d, f), fan_in=d, dtype=dtype),
+        "experts_up": nn.dense_init(ks[2], (e, d, f), fan_in=d, dtype=dtype),
+        "experts_down": nn.dense_init(ks[3], (e, f, d), fan_in=f, dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_gate"] = nn.dense_init(ks[4], (d, fs), fan_in=d, dtype=dtype)
+        p["shared_up"] = nn.dense_init(ks[5], (d, fs), fan_in=d, dtype=dtype)
+        p["shared_down"] = nn.dense_init(ks[6], (fs, d), fan_in=fs, dtype=dtype)
+    return p
+
+
+def capacity(cfg: ArchConfig, group_tokens: int) -> int:
+    c = math.ceil(cfg.capacity_factor * group_tokens * cfg.top_k / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def _route_group(x: jax.Array, router_logits: jax.Array, cfg: ArchConfig, cap: int):
+    """One group's dispatch. x: (S,D), router_logits: (S, n_experts) fp32.
+
+    Returns (dispatch buffers, routing state, router probs).  Dead padded
+    experts (expert_pad_to) get no router logits, so top_k never picks
+    them -- they only exist so the buffer's E dim divides the mesh."""
+    s, d = x.shape
+    e, k = _epad(cfg), cfg.top_k
+    probs = jax.nn.softmax(router_logits, axis=-1)                 # (S,E)
+    gates, ids = jax.lax.top_k(probs, k)                           # (S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = ids.reshape(-1)                                     # (S*k,)
+    order = jnp.argsort(flat_ids)                                  # stable
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=e)                      # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(s * k) - starts[sorted_ids]
+    keep = pos_in_expert < cap
+    slot = jnp.where(keep, sorted_ids * cap + pos_in_expert, e * cap)  # overflow row
+
+    tok_idx = order // k                                           # source token
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(
+        jnp.where(keep[:, None], x[tok_idx], 0))
+    buf = buf[:-1].reshape(e, cap, d)
+    return buf, (order, slot, keep, tok_idx, gates), probs
+
+
+def _combine_group(buf_out: jax.Array, route, s: int, k: int, dtype):
+    order, slot, keep, tok_idx, gates = route
+    e, cap, d = buf_out.shape
+    flat = buf_out.reshape(e * cap, d)
+    picked = jnp.where(keep[:, None], flat[jnp.minimum(slot, e * cap - 1)], 0)
+    # scatter back to (S*k) assignment order, then weight by gates and sum k
+    unsorted = jnp.zeros((s * k, d), dtype).at[order].set(picked.astype(dtype))
+    return (unsorted.reshape(s, k, d) * gates[..., None].astype(dtype)).sum(axis=1)
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig):
+    """x: (B,S,D) -> (y (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(cfg, s)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+
+    bufs, routes, probs = jax.vmap(
+        lambda xg, lg: _route_group(xg, lg, cfg, cap))(x, logits)
+    # (B,E,C,D): expert-parallel when E divides the model axis; otherwise
+    # the trailing "model" fallback shards D so the capacity buffers (the
+    # dominant MoE memory term, cf*k times the token count) never sit
+    # replicated on every chip (EXPERIMENTS.md §Perf iteration A2)
+    bufs = constrain(bufs, "batch", "expert", None, "model")
+
+    # expert compute (batched over B groups; experts sharded over model axis)
+    h_gate = jnp.einsum("becd,edf->becf", bufs, p["experts_gate"])
+    h_up = jnp.einsum("becd,edf->becf", bufs, p["experts_up"])
+    h = nn.swiglu(h_up, h_gate)
+    h = constrain(h, "batch", "expert", None, "model")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["experts_down"])
+    out_buf = constrain(out_buf, "batch", "expert", None, "model")
+
+    y = jax.vmap(lambda bo, r: _combine_group(bo, r, s, k, x.dtype))(out_buf, routes)
+
+    # Switch-style load-balance aux loss, averaged over groups
+    me = probs.mean(axis=1)                                        # (B,E)
+    top1 = jnp.argmax(logits, axis=-1)
+    ce = jax.vmap(lambda t: jnp.bincount(t, length=e) / s)(top1)   # (B,E)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    if cfg.n_shared_experts:
+        sh = nn.swiglu(jnp.einsum("bsd,df->bsf", x, p["shared_up"]),
+                       jnp.einsum("bsd,df->bsf", x, p["shared_gate"]))
+        y = y + jnp.einsum("bsf,fd->bsd", sh, p["shared_down"])
+    return y, aux.astype(jnp.float32)

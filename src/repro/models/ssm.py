@@ -1,0 +1,349 @@
+"""SSM family blocks: Mamba2 (zamba2), mLSTM + sLSTM (xlstm).
+
+All three expose (init, forward, decode_step, cache_shape):
+  forward     -- full-sequence (train / prefill), chunkwise-parallel scans
+  decode_step -- single-token recurrent update against carried state
+State tensors are fp32 (recurrence stability); activations follow cfg.dtype.
+
+TPU adaptation (DESIGN.md): the GPU selective-scan kernels become chunked
+matmul scans (MXU work) -- Mamba2 via kernels/ssm_scan (Pallas) or the
+chunked-jnp twin; mLSTM via an analogous stabilised chunked form below.
+sLSTM is inherently sequential (scalar recurrence) and stays a lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from . import modules as nn
+from .sharding import constrain
+
+Params = Any
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba2_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, inner, n, kconv = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h = cfg.n_heads                       # ssm heads; head dim P = inner // h
+    ks = nn.split_keys(key, 6)
+    conv_dim = inner + 2 * n              # x, B, C all pass the causal conv
+    return {
+        "in_proj": nn.dense_init(ks[0], (d, inner), fan_in=d, dtype=dtype),      # gate z
+        "xbc_proj": nn.dense_init(ks[1], (d, conv_dim), fan_in=d, dtype=dtype),
+        "conv_w": nn.dense_init(ks[2], (kconv, conv_dim), fan_in=kconv, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_proj": nn.dense_init(ks[3], (d, h), fan_in=d, dtype=dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D_skip": jnp.ones((h,), dtype),
+        "ssm_norm": jnp.zeros((inner,), dtype),
+        "out_proj": nn.dense_init(ks[4], (inner, d), fan_in=inner, dtype=dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. u: (B,S,C), w: (k,C)."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                   *, return_state: bool = False):
+    b, s, d = x.shape
+    inner, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    ph = inner // h
+    z = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xbc = jnp.einsum("bsd,dc->bsc", x, p["xbc_proj"])
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xin, Bm, Cm = jnp.split(xbc, [inner, inner + n], axis=-1)
+    xin = constrain(xin, "batch", None, "model")
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["dt_proj"])
+                         + p["dt_bias"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"])
+    chunk_unroll = cfg.chunk_unroll if cfg.chunk_unroll is not None else cfg.scan_unroll
+    y, h_final = ops.ssm_scan(xin.reshape(b, s, h, ph), dt, A, Bm, Cm,
+                              chunk=cfg.ssm_chunk, use_kernel=cfg.use_kernels,
+                              unroll=chunk_unroll)
+    y = y.reshape(b, s, inner) + xin * jnp.repeat(p["D_skip"], ph)[None, None, :]
+    y = nn.rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        # conv tail: last (k-1) pre-activation conv inputs
+        k = cfg.ssm_conv
+        xbc_raw = jnp.einsum("bsd,dc->bsc", x, p["xbc_proj"])
+        tail = xbc_raw[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+        return out, {"ssm": h_final, "conv": tail.astype(jnp.float32)}
+    return out
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """x: (B,1,D); cache {ssm:(B,H,P,N) f32, conv:(B,k-1,convdim) f32}."""
+    b = x.shape[0]
+    inner, n, h, k = cfg.d_inner, cfg.ssm_state, cfg.n_heads, cfg.ssm_conv
+    ph = inner // h
+    z = jnp.einsum("bsd,di->bsi", x, p["in_proj"])[:, 0]
+    xbc_new = jnp.einsum("bsd,dc->bsc", x, p["xbc_proj"])[:, 0]    # (B,C)
+    window = jnp.concatenate([cache["conv"], xbc_new[:, None, :].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(x.dtype), p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(xbc, [inner, inner + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["dt_proj"])[:, 0]
+                         + p["dt_bias"].astype(x.dtype))           # (B,H)
+    A = -jnp.exp(p["A_log"])
+    hstate = cache["ssm"]
+    decay = jnp.exp(A[None, :] * dt.astype(jnp.float32))           # (B,H)
+    inject = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(jnp.float32),
+                        xin.reshape(b, h, ph).astype(jnp.float32),
+                        Bm.astype(jnp.float32))
+    hstate = hstate * decay[..., None, None] + inject
+    y = jnp.einsum("bhpn,bn->bhp", hstate, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y.reshape(b, inner) + xin * jnp.repeat(p["D_skip"], ph)[None, :]
+    y = nn.rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, {"ssm": hstate, "conv": window[:, 1:, :]}
+
+
+def mamba2_cache_shape(cfg: ArchConfig, batch: int):
+    inner, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    return {"ssm": (batch, h, inner // h, n),
+            "conv": (batch, cfg.ssm_conv - 1, inner + 2 * n)}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory) -- chunkwise-parallel stabilised form
+# ===========================================================================
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = nn.split_keys(key, 7)
+    return {
+        "w_qx": nn.dense_init(ks[0], (d, h * hd), fan_in=d, dtype=dtype),
+        "w_kx": nn.dense_init(ks[1], (d, h * hd), fan_in=d, dtype=dtype),
+        "w_vx": nn.dense_init(ks[2], (d, h * hd), fan_in=d, dtype=dtype),
+        "w_i": nn.dense_init(ks[3], (d, h), fan_in=d, dtype=dtype),
+        "w_f": nn.dense_init(ks[4], (d, h), fan_in=d, dtype=dtype),
+        "b_i": jnp.zeros((h,), dtype),
+        "b_f": jnp.full((h,), 3.0, dtype),        # forget-gate bias ~ remember
+        "w_o": nn.dense_init(ks[5], (d, h * hd), fan_in=d, dtype=dtype),
+        "out_proj": nn.dense_init(ks[6], (h * hd, d), fan_in=d, dtype=dtype),
+        "scale": jnp.zeros((d,), dtype),          # pre-out groupnorm-ish scale
+    }
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk: int, state=None, unroll: bool = False):
+    """Stabilised chunkwise mLSTM. q,k,v: (B,S,H,D); logi/logf: (B,S,H) fp32.
+
+    Returns (y (B,S,H,D), state (C,n,m)).  Matches kernels.ref.mlstm_scan_ref
+    (y is stabiliser-invariant)."""
+    b, s, h, d = q.shape
+    t = min(chunk, s)
+    pad = (-s) % t
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // t
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, nc, t, h, d)
+    kf = k.astype(jnp.float32).reshape(b, nc, t, h, d)
+    vf = v.astype(jnp.float32).reshape(b, nc, t, h, d)
+    li = logi.reshape(b, nc, t, h)
+    lf = logf.reshape(b, nc, t, h)
+    tri = jnp.tril(jnp.ones((t, t), jnp.float32))
+
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+
+    def chunk_step(carry, args):
+        C, nvec, m = carry
+        qc, kc, vc, lic, lfc = args                    # (B,t,H,*)
+        bcum = jnp.cumsum(lfc, axis=1)                 # (B,t,H) cumulative logf
+        # intra-chunk log weights w[t,s] = bcum_t - bcum_s + li_s  (s<=t)
+        wlog = bcum[:, :, None, :] - bcum[:, None, :, :] + lic[:, None, :, :]
+        wlog = jnp.where(tri[None, :, :, None] > 0, wlog, -jnp.inf)
+        glog = bcum + m[:, None, :]                    # state contribution decay
+        m_row = jnp.maximum(jnp.max(wlog, axis=2), glog)           # (B,t,H)
+        m_row = jnp.maximum(m_row, -1e30)
+        wexp = jnp.exp(wlog - m_row[:, :, None, :])                # (B,t,s,H)
+        gexp = jnp.exp(glog - m_row)                               # (B,t,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * wexp
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        y_state = gexp[..., None] * jnp.einsum("bhde,bthe->bthd", C, qc)
+        nq = (jnp.einsum("btsh,bshd->bthd", wexp, kc) * qc).sum(-1) \
+            + gexp * jnp.einsum("bthd,bhd->bth", qc, nvec)
+        denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_row))
+        y = (y_intra + y_state) / denom[..., None]
+        # carry update (end of chunk), stabilised at m_new
+        m_new = jnp.maximum(bcum[:, -1] + m, jnp.max(lic + (bcum[:, -1:] - bcum), axis=1))
+        c_decay = jnp.exp(bcum[:, -1] + m - m_new)                 # (B,H)
+        inj_w = jnp.exp(lic + (bcum[:, -1:] - bcum) - m_new[:, None])  # (B,t,H)
+        C_new = C * c_decay[..., None, None] + jnp.einsum(
+            "bthd,bthe,bth->bhde", vc, kc, inj_w)
+        n_new = nvec * c_decay[..., None] + jnp.einsum("bthd,bth->bhd", kc, inj_w)
+        return (C_new, n_new, m_new), y
+
+    args = tuple(a.transpose(1, 0, *range(2, a.ndim)) for a in (qf, kf, vf, li, lf))
+    state, ys = jax.lax.scan(chunk_step, state, args, unroll=True if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * t, h, d)[:, :s]
+    return y, state
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                  *, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = jnp.einsum("bsd,de->bse", x, p["w_qx"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["w_kx"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["w_vx"]).reshape(b, s, h, hd)
+    q = constrain(q, "batch", None, "model")
+    logi = (jnp.einsum("bsd,dh->bsh", x, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, p["w_f"]) + p["b_f"]).astype(jnp.float32))
+    if cfg.use_kernels and not return_state:
+        from ..kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
+        y = _mlstm_pallas(q, k, v, logi, logf, chunk=cfg.ssm_chunk,
+                          interpret=jax.default_backend() != "tpu")
+        state = None
+    else:
+        chunk_unroll = cfg.chunk_unroll if cfg.chunk_unroll is not None \
+            else cfg.scan_unroll
+        y, state = _mlstm_chunked(q, k, v, logi, logf, cfg.ssm_chunk,
+                                  unroll=chunk_unroll)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_o"]))
+    y = y.reshape(b, s, h * hd).astype(x.dtype) * o
+    out = jnp.einsum("bse,ed->bsd", nn.rms_norm(y, p["scale"], cfg.norm_eps),
+                     p["out_proj"])
+    if return_state:
+        return out, {"C": state[0], "n": state[1], "m": state[2]}
+    return out
+
+
+def mlstm_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """One-step recurrent mLSTM. cache {C:(B,H,D,D), n:(B,H,D), m:(B,H)}."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = jnp.einsum("bsd,de->bse", x, p["w_qx"])[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    k = jnp.einsum("bsd,de->bse", x, p["w_kx"])[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    v = jnp.einsum("bsd,de->bse", x, p["w_vx"])[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    logi = (jnp.einsum("bsd,dh->bsh", x, p["w_i"])[:, 0] + p["b_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, p["w_f"])[:, 0] + p["b_f"]).astype(jnp.float32))
+    C, nvec, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    fe = jnp.exp(logf + m - m_new)
+    ie = jnp.exp(logi - m_new)
+    C = C * fe[..., None, None] + ie[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    nvec = nvec * fe[..., None] + ie[..., None] * k
+    qs = q * hd ** -0.5
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", nvec, qs)), jnp.exp(-m_new))
+    y = jnp.einsum("bhde,bhe->bhd", C, qs) / denom[..., None]
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_o"])[:, 0])
+    y = y.reshape(b, h * hd).astype(x.dtype) * o
+    out = jnp.einsum("be,ed->bd", nn.rms_norm(y, p["scale"], cfg.norm_eps),
+                     p["out_proj"])[:, None, :]
+    return out, {"C": C, "n": nvec, "m": m_new}
+
+
+def mlstm_cache_shape(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {"C": (batch, h, hd, hd), "n": (batch, h, hd), "m": (batch, h)}
+
+
+# ===========================================================================
+# sLSTM (scalar memory, sequential)
+# ===========================================================================
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = nn.split_keys(key, 9)
+    p = {"out_proj": nn.dense_init(ks[8], (h * hd, d), fan_in=d, dtype=dtype),
+         "scale": jnp.zeros((d,), dtype)}
+    for name, kk in zip(("w_i", "w_f", "w_z", "w_o"), ks[:4]):
+        p[name] = nn.dense_init(kk, (d, h * hd), fan_in=d, dtype=dtype)
+    for name, kk in zip(("r_i", "r_f", "r_z", "r_o"), ks[4:8]):
+        # block-diagonal recurrent weights: per-head (hd, hd)
+        p[name] = nn.dense_init(kk, (h, hd, hd), fan_in=hd, dtype=dtype)
+    p["b_i"] = jnp.zeros((h * hd,), dtype)
+    p["b_f"] = jnp.full((h * hd,), 3.0, dtype)
+    return p
+
+
+def _slstm_step(p, cfg, carry, xt):
+    """xt: (B, D_in-projected gates preacts computed outside for speed)."""
+    c, n, m, hprev = carry                                        # (B,H,hd) each
+    b = hprev.shape[0]
+    h_heads, hd = hprev.shape[1], hprev.shape[2]
+    xi, xf, xz, xo = xt                                           # (B, H*hd) preacts
+
+    def rec(w, hv):
+        return jnp.einsum("bhe,hef->bhf", hv, w)
+
+    i_pre = xi.reshape(b, h_heads, hd) + rec(p["r_i"], hprev)
+    f_pre = xf.reshape(b, h_heads, hd) + rec(p["r_f"], hprev)
+    z_pre = xz.reshape(b, h_heads, hd) + rec(p["r_z"], hprev)
+    o_pre = xo.reshape(b, h_heads, hd) + rec(p["r_o"], hprev)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    fe, ie = jnp.exp(logf + m - m_new), jnp.exp(logi - m_new)
+    c_new = fe * c + ie * jnp.tanh(z_pre.astype(jnp.float32))
+    n_new = fe * n + ie
+    h_new = jax.nn.sigmoid(o_pre.astype(jnp.float32)) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new.astype(hprev.dtype))
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                  *, return_state: bool = False):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    pre = {g: jnp.einsum("bsd,de->bse", x, p[f"w_{g}"]) + p[f"b_{g}"]
+           if f"b_{g}" in p else jnp.einsum("bsd,de->bse", x, p[f"w_{g}"])
+           for g in ("i", "f", "z", "o")}
+    init = (jnp.zeros((b, h, hd), jnp.float32), jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h, hd), -1e30, jnp.float32), jnp.zeros((b, h, hd), jnp.float32))
+
+    def step(carry, t):
+        xt = tuple(pre[g][:, t] for g in ("i", "f", "z", "o"))
+        new = _slstm_step(p, cfg, carry, xt)
+        return new, new[3]
+
+    carry, hs = jax.lax.scan(step, init, jnp.arange(s))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, h * hd).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", nn.rms_norm(y, p["scale"], cfg.norm_eps),
+                     p["out_proj"])
+    if return_state:
+        return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    return out
+
+
+def slstm_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    xt = tuple((jnp.einsum("bsd,de->bse", x, p[f"w_{g}"])[:, 0]
+                + (p[f"b_{g}"] if f"b_{g}" in p else 0)) for g in ("i", "f", "z", "o"))
+    c, n, m, hnew = _slstm_step(p, cfg, carry, xt)
+    b, d = x.shape[0], x.shape[2]
+    y = hnew.reshape(b, -1).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", nn.rms_norm(y, p["scale"], cfg.norm_eps),
+                     p["out_proj"])[:, None, :]
+    return out, {"c": c, "n": n, "m": m, "h": hnew}
+
+
+def slstm_cache_shape(cfg: ArchConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    shp = (batch, h, hd)
+    return {"c": shp, "n": shp, "m": shp, "h": shp}

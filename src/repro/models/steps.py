@@ -1,0 +1,111 @@
+"""Jitted entry points per architecture: train_step / prefill / serve_step,
+plus loss and the ShapeDtypeStruct input_specs used by the dry-run.
+
+Shape contract (system assignment):
+  train_4k    -> train_step(params, opt_state, batch)
+  prefill_32k -> prefill(params, batch)              (builds the KV cache)
+  decode_32k, long_500k -> serve_step(params, cache, tokens, positions)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..optim import adamw
+from . import lm
+from .sharding import constrain
+
+Params = Any
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; labels==-1 masked out."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    logits, aux, _ = lm.forward(params, cfg, batch)
+    ce = softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+    return ce + cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def train_step(params, opt_state, batch, *, cfg: ArchConfig,
+               opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    params, opt_state, opt_metrics = adamw.adamw_update(params, grads, opt_state, opt_cfg)
+    return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+
+def prefill(params, batch, *, cfg: ArchConfig, cache_len: int = 0):
+    """Full-sequence forward emitting a decode cache (padded to cache_len)."""
+    cache_len = cache_len or batch["tokens"].shape[1]
+    logits, _, cache = lm.forward(params, cfg, batch, collect_cache=True,
+                                  cache_len=cache_len)
+    return logits[:, -1], cache
+
+
+def serve_step(params, cache, tokens, positions, *, cfg: ArchConfig):
+    """ONE new token per sequence against the cache. tokens: (B,1)."""
+    return lm.decode_step(params, cfg, tokens, positions, cache)
+
+
+def greedy_decode_loop(params, cache, first_token, start_pos, n_steps: int,
+                       *, cfg: ArchConfig):
+    """lax.scan'd greedy generation (serving substrate)."""
+    def step(carry, _):
+        tok, pos, cch = carry
+        logits, cch = lm.decode_step(params, cfg, tok, pos, cch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, pos + 1, cch), nxt[:, 0]
+
+    (_, _, cache), toks = jax.lax.scan(
+        step, (first_token, start_pos, cache), None, length=n_steps)
+    return toks.T, cache          # (B, n_steps)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch x shape) for the dry-run
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ArchConfig, batch: int, seq: int, *, train: bool) -> dict:
+    i32 = jnp.int32
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if train:
+        spec["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if cfg.use_mrope:
+        spec["mrope_positions"] = jax.ShapeDtypeStruct((batch, 3, seq), i32)
+    if cfg.family == "vlm":
+        spec["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, min(cfg.n_vision_tokens, seq), cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "audio":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_len, cfg.d_model), cfg.compute_dtype)
+    return spec
+
+
+def decode_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    i32 = jnp.int32
+    tokens = jax.ShapeDtypeStruct((batch, 1), i32)
+    pos_shape = (batch, 3) if cfg.use_mrope else (batch,)
+    positions = jax.ShapeDtypeStruct(pos_shape, i32)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, batch, cache_len))
+    return tokens, positions, cache
+
+
+def params_spec(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_spec(params_shape):
+    return jax.eval_shape(adamw.init_opt_state, params_shape)

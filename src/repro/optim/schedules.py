@@ -1,0 +1,19 @@
+"""LR schedules (pure fns of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr=1.0, warmup=100, total=1000, min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def constant(step, *, base_lr=1.0):
+    return jnp.asarray(base_lr, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}

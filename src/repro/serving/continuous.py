@@ -1,0 +1,152 @@
+"""Continuous-batching decode engine (beyond-paper serving feature).
+
+KServe's request-level batching (kserve.py) wastes decode slots when
+sequences finish at different times.  This engine keeps a fixed-width slot
+pool over ONE shared KV cache and admits queued prompts into freed slots
+between steps -- the vLLM-style scheduling pattern, built on the same
+models.lm decode path used by the dry-run (per-sequence positions).
+
+Mechanics: every step advances ALL slots by one token through
+lm.decode_step.  A newly admitted prompt is "caught up" by teacher-forcing
+its prompt tokens through the decode path (one per step) before switching
+to generation; idle slots process a pad token whose writes land in their
+own cache rows, never leaking across slots (cache rows are per-sequence).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import lm
+
+PAD = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list          # token ids
+    max_new: int
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    admitted_step: int = -1
+    finished_step: int = -1
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0              # next cache position for this row
+    remaining_prompt: int = 0  # tokens still being teacher-forced
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_len: int = 128, eos_id: Optional[int] = None):
+        assert cfg.family not in ("audio",), "enc-dec admission not supported"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = lm.init_cache(cfg, max_slots, max_len)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.queue: list[Request] = []
+        self.step_count = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, cfg, t, pos, c))
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: list, max_new: int) -> Request:
+        req = Request(rid=len(self.queue), prompt=list(prompt), max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    @property
+    def active(self) -> int:
+        return sum(s.req is not None for s in self.slots)
+
+    def _reset_row(self, i: int):
+        """Zero cache row i: KV rows would be masked by eff_len anyway, but
+        recurrent state (SSM/mLSTM carries) PERSISTS across occupants and
+        must be cleared at re-admission."""
+        def zero_row(a):
+            if a.ndim >= 2 and a.shape[1] == self.max_slots:
+                return a.at[:, i].set(jnp.zeros_like(a[:, i]))
+            return a
+        self.cache = {
+            k: (jax.tree_util.tree_map(zero_row, v) if k.startswith("phase")
+                else v)
+            for k, v in self.cache.items()
+        }
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s.req is None and self.queue:
+                req = self.queue.pop(0)
+                req.admitted_step = self.step_count
+                s.req = req
+                s.pos = 0
+                s.remaining_prompt = len(req.prompt)
+                self._reset_row(i)
+
+    # -- engine -------------------------------------------------------------
+    def step(self):
+        """Advance every slot one token; admit queued work into free slots."""
+        self._admit()
+        tokens, positions = [], []
+        for s in self.slots:
+            if s.req is None:
+                tokens.append(PAD)
+                positions.append(s.pos)
+                continue
+            if s.remaining_prompt > 0:     # teacher-force the prompt
+                idx = len(s.req.prompt) - s.remaining_prompt
+                tokens.append(s.req.prompt[idx])
+            else:                          # feed back last generated token
+                tokens.append(s.req.output[-1] if s.req.output
+                              else s.req.prompt[-1])
+            positions.append(s.pos)
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        pos = jnp.asarray(positions, jnp.int32)
+        if self.cfg.use_mrope:
+            pos = jnp.broadcast_to(pos[:, None], (self.max_slots, 3))
+        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            s.pos += 1
+            if s.remaining_prompt > 0:
+                s.remaining_prompt -= 1
+                if s.remaining_prompt == 0:
+                    s.req.output.append(int(nxt[i]))   # first generated token
+            else:
+                s.req.output.append(int(nxt[i]))
+            hit_eos = self.eos_id is not None and s.req.output \
+                and s.req.output[-1] == self.eos_id
+            if s.req.output and (len(s.req.output) >= s.req.max_new or hit_eos
+                                 or s.pos >= self.max_len - 1):
+                s.req.done = True
+                s.req.finished_step = self.step_count
+                s.req = None               # free the slot for admission
+        self.step_count += 1
+
+    def run(self, max_steps: int = 10_000) -> list:
+        """Drain the queue; returns all finished requests."""
+        finished: list[Request] = []
+        seen = set()
+        all_reqs = list(self.queue)
+        while (self.queue or self.active) and self.step_count < max_steps:
+            self.step()
+            for r in all_reqs:
+                if r.done and r.rid not in seen:
+                    seen.add(r.rid)
+                    finished.append(r)
+        return finished

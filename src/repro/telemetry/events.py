@@ -1,0 +1,44 @@
+"""Structured event log + stage timing (the Istio-metrics analog).
+
+Every pipeline run / serving session records stage events; benchmarks read
+these to build the paper's Tables 4/5 (per-stage pipeline timing).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Any, Optional
+
+
+class EventLog:
+    def __init__(self):
+        self.events: list[dict] = []
+
+    def record(self, name: str, duration_s: float, **meta):
+        self.events.append({"name": name, "duration_s": duration_s,
+                            "t": time.time(), **meta})
+
+    @contextlib.contextmanager
+    def stage(self, name: str, **meta):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(name, time.perf_counter() - t0, **meta)
+
+    def totals(self) -> dict:
+        out: dict = {}
+        for e in self.events:
+            out[e["name"]] = out.get(e["name"], 0.0) + e["duration_s"]
+        return out
+
+    def dump(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.events, indent=1, default=str)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s
+
+
+GLOBAL_LOG = EventLog()

@@ -1,0 +1,28 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def make_batch(cfg, B, S, key=None, labels=True):
+    """Batch dict matching models.lm.forward's contract for any family."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if labels:
+        b["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.use_mrope:
+        b["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (B, 3, S))
+    if cfg.family == "vlm":
+        b["vision_embeds"] = jax.random.normal(
+            ks[2], (B, min(cfg.n_vision_tokens, S), cfg.d_model))
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(ks[3], (B, cfg.encoder_len, cfg.d_model))
+    return b
+
+
+@pytest.fixture(scope="session")
+def mnist_data():
+    from repro.data.mnist import make_dataset
+    return make_dataset(256, seed=0)

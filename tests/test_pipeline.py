@@ -1,0 +1,93 @@
+"""Pipeline DAG semantics: ordering, cycles, caching, spec export."""
+import pytest
+import yaml
+
+from repro.checkpoint.store import ArtifactStore
+from repro.core.pipeline import Pipeline, StepRef
+
+
+def double(x):
+    return x * 2
+
+
+def add(a, b):
+    return a + b
+
+
+def seven():
+    return 7
+
+
+def test_topological_execution_and_outputs(tmp_path):
+    p = Pipeline("t", ArtifactStore(str(tmp_path)))
+    a = p.step(seven)
+    b = p.step(double, a)
+    c = p.step(add, a, b)
+    out = p.run()
+    assert out == {"seven": 7, "double": 14, "add": 21}
+
+
+def test_dependency_order_independent_of_declaration(tmp_path):
+    p = Pipeline("t2", ArtifactStore(str(tmp_path)))
+    # declare consumer first via forward ref
+    a = p.step(seven)
+    c_ref = StepRef  # noqa: just to show refs are plain handles
+    b = p.step(double, a)
+    out = p.run()
+    assert out["double"] == 14
+
+
+def test_cycle_detection():
+    p = Pipeline("cyc")
+    a = p.step(double, StepRef("b", 1))
+    b = p.step(double, StepRef("a", 0))
+    with pytest.raises(ValueError, match="cycle"):
+        p.run()
+
+
+def test_step_caching_across_runs(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+
+    def build():
+        p = Pipeline("cached", store)
+        a = p.step(seven)
+        b = p.step(double, a)
+        return p
+
+    p1 = build()
+    p1.run()
+    assert [s.cached for s in p1.steps] == [False, False]
+    p2 = build()
+    out = p2.run()
+    assert [s.cached for s in p2.steps] == [True, True]
+    assert out["double"] == 14
+
+
+def test_cache_invalidated_by_input_change(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    p1 = Pipeline("inv", store)
+    p1.step(double, 3, name="d")
+    assert p1.run()["d"] == 6
+    p2 = Pipeline("inv", store)
+    p2.step(double, 4, name="d")
+    assert p2.run()["d"] == 8          # not the stale cached 6
+    assert p2.steps[0].cached is False
+
+
+def test_yaml_spec_roundtrip(tmp_path):
+    p = Pipeline("spec-test", ArtifactStore(str(tmp_path)))
+    a = p.step(seven)
+    b = p.step(double, a)
+    spec = yaml.safe_load(p.export_yaml())
+    assert spec["kind"] == "Pipeline"
+    assert spec["metadata"]["name"] == "spec-test"
+    steps = spec["spec"]["steps"]
+    assert steps[1]["dependencies"] == ["seven"]
+
+
+def test_stage_timing_recorded(tmp_path):
+    p = Pipeline("timed", ArtifactStore(str(tmp_path)))
+    p.step(seven)
+    p.run()
+    names = [e["name"] for e in p.log.events]
+    assert "seven" in names and "pipeline:timed" in names

@@ -1,0 +1,157 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.checkpoint.store import tree_hash
+from repro.kernels import ref
+from repro.models import sharding as msh
+from repro.models.attention import apply_rope
+from repro.models.steps import softmax_xent
+
+MESH = AbstractMesh((4, 2), ("data", "model"))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 97), min_size=1, max_size=4),
+       st.integers(0, 3))
+def test_fit_pspec_always_divisible(dims, which):
+    """fit_pspec output must always be a legal argument sharding."""
+    shape = tuple(dims)
+    spec_entries = [None] * len(shape)
+    spec_entries[min(which, len(shape) - 1)] = "model"
+    fitted = msh.fit_pspec(shape, P(*spec_entries), MESH)
+    for dim, entry in zip(shape, tuple(fitted) + (None,) * len(shape)):
+        if entry is not None:
+            assert dim % msh._axis_size(MESH, entry) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 1000))
+def test_rope_preserves_norm(d2, pos):
+    """RoPE is a rotation: vector norms are invariant."""
+    d = d2 * 2
+    x = jax.random.normal(jax.random.PRNGKey(d2), (1, 1, 1, d))
+    pos_arr = jnp.full((1, 1), pos, jnp.int32)
+    y = apply_rope(x, pos_arr, 10000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(3, 20), st.integers(5, 50))
+def test_softmax_xent_matches_manual(b, s, v):
+    key = jax.random.PRNGKey(b * 100 + s)
+    logits = jax.random.normal(key, (b, s, v))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, v)
+    got = float(softmax_xent(logits, labels))
+    p = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.take_along_axis(p, labels[..., None], -1).mean())
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_softmax_xent_ignores_masked_labels():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 11))
+    labels = jnp.full((2, 8), -1, jnp.int32)
+    labels = labels.at[:, 0].set(3)
+    loss = softmax_xent(logits, labels)
+    only = softmax_xent(logits[:, :1], labels[:, :1])
+    np.testing.assert_allclose(float(loss), float(only), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 24))
+def test_attention_causality(s):
+    """Output at position t must not depend on tokens after t."""
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    base = ref.flash_attention_ref(q, k, v, causal=True)
+    t = s // 2
+    k2 = k.at[:, t + 1:].set(999.0)
+    v2 = v.at[:, t + 1:].set(-999.0)
+    pert = ref.flash_attention_ref(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :t + 1], pert[:, :t + 1], atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 32))
+def test_sliding_window_masks_old_tokens(w, extra):
+    s = w + extra
+    ks = jax.random.split(jax.random.PRNGKey(s * 7 + w), 3)
+    q = jax.random.normal(ks[0], (1, s, 1, 8))
+    k = jax.random.normal(ks[1], (1, s, 1, 8))
+    v = jax.random.normal(ks[2], (1, s, 1, 8))
+    base = ref.flash_attention_ref(q, k, v, causal=True, window=w)
+    # corrupt tokens older than the window of the last position
+    cutoff = s - w
+    k2 = k.at[:, :cutoff].set(123.0)
+    v2 = v.at[:, :cutoff].set(-123.0)
+    pert = ref.flash_attention_ref(q, k2, v2, causal=True, window=w)
+    np.testing.assert_allclose(base[:, -1], pert[:, -1], atol=1e-5)
+
+
+def test_tree_hash_detects_changes_and_is_stable():
+    t1 = {"a": np.arange(10.0), "b": {"c": np.ones((3, 3))}}
+    t2 = {"a": np.arange(10.0), "b": {"c": np.ones((3, 3))}}
+    assert tree_hash(t1) == tree_hash(t2)
+    t2["b"]["c"][0, 0] = 2.0
+    assert tree_hash(t1) != tree_hash(t2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_decode_attention_respects_cache_len(s, valid):
+    valid = min(valid, s)
+    ks = jax.random.split(jax.random.PRNGKey(s + valid), 3)
+    q = jax.random.normal(ks[0], (1, 2, 8))
+    kc = jax.random.normal(ks[1], (1, s, 2, 8))
+    vc = jax.random.normal(ks[2], (1, s, 2, 8))
+    lens = jnp.array([valid], jnp.int32)
+    base = ref.decode_attention_ref(q, kc, vc, lens)
+    kc2 = kc.at[:, valid:].set(555.0)
+    vc2 = vc.at[:, valid:].set(-555.0)
+    pert = ref.decode_attention_ref(q, kc2, vc2, lens)
+    np.testing.assert_allclose(base, pert, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.integers(0, 2))
+def test_katib_space_roundtrip(u1, u2, cat):
+    """_from_unit/_to_unit are inverses over the search space."""
+    from repro.tuning import katib
+    space = {"lr": katib.Double(1e-5, 1e-1, log=True),
+             "w": katib.Double(-2.0, 3.0),
+             "act": katib.Categorical(("a", "b", "c"))}
+    params = katib._from_unit(space, np.array([u1, u2, cat / 2.0]))
+    back = katib._to_unit(space, params)
+    again = katib._from_unit(space, back)
+    assert abs(again["lr"] - params["lr"]) / params["lr"] < 1e-6
+    assert abs(again["w"] - params["w"]) < 1e-6
+    assert again["act"] == params["act"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4096), st.floats(0.5, 4.0))
+def test_moe_capacity_monotone_and_sufficient(tokens, cf):
+    """Capacity covers at least top_k slots and grows with tokens/cf."""
+    from repro.configs import registry
+    from repro.models import moe
+    cfg = registry.get_config("granite_moe_3b_a800m").replace(capacity_factor=cf)
+    c = moe.capacity(cfg, tokens)
+    assert c >= cfg.top_k
+    assert c >= int(cf * tokens * cfg.top_k / cfg.n_experts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 128), st.integers(1, 8))
+def test_sinusoid_positions_distinct(d2, stride):
+    """Distinct positions produce distinct positional encodings."""
+    from repro.models.lm import sinusoid
+    d = d2 * 2
+    pos = jnp.asarray([[0, stride]], jnp.int32)
+    enc = sinusoid(pos, d)
+    assert float(jnp.abs(enc[0, 0] - enc[0, 1]).max()) > 1e-6

@@ -1,0 +1,85 @@
+"""Roofline extraction units: HLO collective parsing, fusion-modeled bytes,
+term math, analytic corrections."""
+import numpy as np
+
+from repro.clouds.profiles import TPU_V5E
+from repro.configs import registry
+from repro.launch import roofline
+
+HLO = """\
+HloModule test
+
+%fused_computation (param_0: f32[128,128]) -> f32[128,128] {
+  %param_0 = f32[128,128]{1,0} parameter(0)
+  ROOT %exp.1 = f32[128,128]{1,0} exponential(%param_0)
+}
+
+ENTRY %main (p0: f32[128,128], p1: bf16[64]) -> f32[128,128] {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %p1 = bf16[64]{0} parameter(1)
+  %ar = f32[128,128]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[256]{0} all-gather(%p1), dimensions={0}
+  %dot.1 = f32[128,128]{1,0} dot(%ar, %ar), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %exp = f32[128,128]{1,0} exponential(%dot.1)
+  %fus = f32[128,128]{1,0} fusion(%exp), kind=kLoop, calls=%fused_computation
+  ROOT %cp = f32[128,128]{1,0} collective-permute(%fus), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = roofline.collective_bytes(HLO)
+    assert out["per_kind_counts"]["all-reduce"] == 1
+    assert out["per_kind_counts"]["all-gather"] == 1
+    assert out["per_kind_counts"]["collective-permute"] == 1
+    assert out["per_kind_bytes"]["all-reduce"] == 128 * 128 * 4
+    assert out["per_kind_bytes"]["all-gather"] == 256 * 2
+    assert out["total_bytes"] == 128 * 128 * 4 * 2 + 512
+
+
+def test_fusion_modeled_bytes_skips_elementwise_and_fusion_bodies():
+    got = roofline.fusion_modeled_bytes(HLO)
+    want = (128 * 128 * 4       # entry param p0
+            + 64 * 2            # entry param p1
+            + 128 * 128 * 4     # all-reduce
+            + 256 * 2           # all-gather
+            + 128 * 128 * 4     # dot
+            + 128 * 128 * 4     # fusion output (single write)
+            + 128 * 128 * 4)    # collective-permute
+    # exponential (elementwise) and the fusion-body param are excluded
+    assert got == want
+
+
+def test_shape_bytes_tuple_and_dtypes():
+    assert roofline._shape_bytes("(f32[2,3]{1,0}, bf16[4]{0})") == 24 + 8
+    assert roofline._shape_bytes("pred[10]") == 10
+    assert roofline._shape_bytes("s32[]") == 0 or roofline._shape_bytes("s32[]") == 4
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline.roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                          coll_bytes=50e9 * 3, chips=256, hw=TPU_V5E)
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 2.0)
+    np.testing.assert_allclose(t.collective_s, 3.0)
+    assert t.dominant == "collective"
+    assert t.total_s == 3.0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = registry.get_config("granite_3_8b")
+    train = roofline.model_flops(cfg, "train", 256, 4096)
+    dec = roofline.model_flops(cfg, "decode", 128, 32768)
+    n = cfg.approx_active_params()
+    np.testing.assert_allclose(train, 6 * n * 256 * 4096)
+    np.testing.assert_allclose(dec, 2 * n * 128)   # one token per sequence
+
+
+def test_corrections_zero_when_inapplicable():
+    dense = registry.get_config("granite_3_8b")
+    assert roofline.slstm_correction_flops(dense, "train", 8, 128) == 0.0
+    assert roofline.chunk_scan_correction_flops(dense, "train", 8, 128) == 0.0
+    xl = registry.get_config("xlstm_1_3b")
+    assert roofline.slstm_correction_flops(xl, "train", 8, 4096) > 0
+    assert roofline.chunk_scan_correction_flops(xl, "train", 8, 4096) > 0
+    assert roofline.chunk_scan_correction_flops(xl, "decode", 8, 4096) == 0.0

@@ -1,0 +1,104 @@
+"""KServe analog: strategy ordering (paper Table 3 shape), batching,
+autoscaling, canary traffic split."""
+import numpy as np
+import pytest
+
+from repro.clouds.profiles import get_profile
+from repro.serving.kserve import InferenceService, Predictor
+
+
+def make_predictor(name="v1", cost_s=0.0):
+    import time
+
+    def predict(x):
+        if cost_s:
+            time.sleep(cost_s)
+        return x.sum(axis=tuple(range(1, x.ndim)))
+
+    return Predictor(name, predict, np.zeros((1, 4), np.float32))
+
+
+def test_strategy_ordering_matches_paper_table3():
+    """baremetal >> k8s > kserve for every request count (paper's finding)."""
+    pred = make_predictor()
+    pred.warmup((1, 32))
+    totals = {}
+    for strat, prof in (("baremetal", "baremetal"), ("k8s", "k8s"),
+                        ("kserve", "gcp")):
+        svc = InferenceService(pred, get_profile(prof), strat)
+        totals[strat] = [svc.stress_test(n).total_time_s for n in (8, 64, 256)]
+    for i in range(3):
+        assert totals["baremetal"][i] > totals["k8s"][i] > totals["kserve"][i]
+    # the gap grows with request count (paper Fig. 21)
+    assert totals["baremetal"][2] / totals["kserve"][2] > \
+        totals["baremetal"][0] / totals["kserve"][0] * 0.5
+
+
+def test_ibm_profile_faster_inference_than_gcp():
+    """Paper §7(1): same-VPC IBM network -> lower inference time."""
+    pred = make_predictor()
+    gcp = InferenceService(pred, get_profile("gcp"), "kserve").stress_test(128)
+    ibm = InferenceService(pred, get_profile("ibm"), "kserve").stress_test(128)
+    assert ibm.total_time_s < gcp.total_time_s
+
+
+def test_all_requests_served_exactly_once():
+    pred = make_predictor()
+    svc = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=8)
+    res = svc.stress_test(100)
+    assert res.n_requests == 100
+    assert len(res.latencies_s) == 100
+    assert all(l > 0 for l in res.latencies_s)
+    assert sum(res.per_version.values()) == 100
+
+
+def test_autoscaler_adds_replicas_under_load():
+    pred = make_predictor(cost_s=0.002)
+    svc = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=4,
+                           min_replicas=1, max_replicas=4, target_queue=4)
+    res = svc.stress_test(128)
+    assert max(r for _, r in res.replica_trace) > 1
+    assert max(r for _, r in res.replica_trace) <= 4
+
+
+def test_canary_traffic_split():
+    v1, v2 = make_predictor("v1"), make_predictor("v2")
+    svc = InferenceService(v1, get_profile("gcp"), "kserve",
+                           canary=v2, canary_fraction=0.25)
+    res = svc.stress_test(400, seed=7)
+    frac = res.per_version.get("v2", 0) / 400
+    assert 0.15 < frac < 0.35
+
+
+def test_batching_reduces_per_request_cost():
+    pred = make_predictor(cost_s=0.001)
+    small = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=1)
+    big = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=32)
+    assert big.stress_test(64).total_time_s < small.stress_test(64).total_time_s
+
+
+def test_poisson_arrivals_latency_includes_queueing():
+    pred = make_predictor(cost_s=0.002)
+    svc = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=4,
+                           max_replicas=1)
+    # overload: arrival rate >> service rate -> queueing delay dominates
+    hot = svc.stress_test(64, arrival="poisson", rate=10000.0)
+    cold = svc.stress_test(64, arrival="poisson", rate=5.0)
+    assert hot.p99 > cold.p99
+    assert all(l > 0 for l in hot.latencies_s)
+    assert hot.n_requests == 64 and sum(hot.per_version.values()) == 64
+
+
+def test_poisson_underload_latency_near_service_time():
+    pred = make_predictor()
+    svc = InferenceService(pred, get_profile("gcp"), "kserve", max_batch=8)
+    res = svc.stress_test(32, arrival="poisson", rate=2.0)
+    base = (get_profile("gcp").network_rtt_s + get_profile("gcp").lb_overhead_s
+            + pred.service_time(1))
+    assert res.p50 < base * 3 + 0.01
+
+
+def test_burst_mode_unchanged_semantics():
+    pred = make_predictor()
+    a = InferenceService(pred, get_profile("gcp"), "kserve").stress_test(50)
+    assert a.n_requests == 50 and len(a.latencies_s) == 50

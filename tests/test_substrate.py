@@ -1,0 +1,101 @@
+"""Substrate: data pipelines, optimizer, checkpoint store, telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import ArtifactStore, tree_hash
+from repro.configs import registry
+from repro.data.mnist import Batches, make_dataset
+from repro.data.tokens import TokenStream, lm_batches
+from repro.optim import adamw
+from repro.optim.schedules import warmup_cosine
+from repro.telemetry.events import EventLog
+
+
+def test_mnist_deterministic_and_shaped():
+    i1, l1 = make_dataset(32, seed=5)
+    i2, l2 = make_dataset(32, seed=5)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(l1, l2)
+    assert i1.shape == (32, 28, 28, 1) and i1.min() >= 0 and i1.max() <= 1
+    assert set(np.unique(l1)).issubset(set(range(10)))
+
+
+def test_mnist_classes_distinguishable(mnist_data):
+    """Mean images of different digits differ substantially."""
+    imgs, labels = mnist_data
+    means = {d: imgs[labels == d].mean(0) for d in (0, 1)}
+    assert np.abs(means[0] - means[1]).mean() > 0.02
+
+
+def test_batches_iterator_drops_remainder():
+    imgs, labels = make_dataset(70, seed=1)
+    batches = list(Batches(imgs, labels, 32))
+    assert len(batches) == 2
+    assert batches[0]["image"].shape == (32, 28, 28, 1)
+
+
+def test_token_stream_deterministic_and_in_range():
+    s1 = TokenStream(1000, seed=2).sample(4, 64)
+    s2 = TokenStream(1000, seed=2).sample(4, 64)
+    np.testing.assert_array_equal(s1, s2)
+    assert s1.min() >= 0 and s1.max() < 1000
+
+
+def test_lm_batches_family_fields():
+    cfg = registry.get_smoke_config("qwen2_vl_7b")
+    b = next(iter(lm_batches(cfg, 2, 16, n_batches=1)))
+    assert "vision_embeds" in b and "mrope_positions" in b
+    cfg = registry.get_smoke_config("whisper_base")
+    b = next(iter(lm_batches(cfg, 2, 16, n_batches=1)))
+    assert b["frames"].shape == (2, cfg.encoder_len, cfg.d_model)
+
+
+def test_adamw_optimises_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw.init_opt_state(params)
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, opt, m = adamw.adamw_update(params, grads, opt, cfg)
+    assert float(loss(params)) < 1e-2
+    assert int(opt["step"]) == 150
+
+
+def test_adamw_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    opt = adamw.init_opt_state(params)
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    grads = {"w": jnp.full(3, 1e6)}
+    new, _, m = adamw.adamw_update(params, grads, opt, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(new["w"]).max()) < 10.0
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert float(warmup_cosine(10, warmup=10, total=100)) > 0.9
+    assert float(warmup_cosine(100, warmup=10, total=100)) < 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.ones(3, jnp.float32)},
+            "step": jnp.array(7, jnp.int32)}
+    uri = store.save_tree("ckpt", tree, meta={"loss": 1.0})
+    assert uri.startswith("file://")
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = store.load_tree("ckpt", like)
+    assert tree_hash(restored) == tree_hash(tree)
+
+
+def test_event_log_stage_and_totals():
+    log = EventLog()
+    with log.stage("a"):
+        pass
+    log.record("a", 1.0)
+    log.record("b", 2.0)
+    totals = log.totals()
+    assert totals["b"] == 2.0 and totals["a"] >= 1.0
