@@ -9,11 +9,12 @@ import argparse
 import sys
 import time
 
-from . import bench_inference, bench_katib, bench_kernels, bench_pipeline, \
-    bench_roofline
+from . import bench_gateway, bench_inference, bench_katib, bench_kernels, \
+    bench_pipeline, bench_roofline
 
 SUITES = {
     "inference": bench_inference.run,     # paper Table 3 / Fig 21
+    "gateway": bench_gateway.run,         # model-mesh fleet (beyond paper)
     "pipeline": bench_pipeline.run,       # paper Tables 4+5 / Figs 22-23
     "katib": bench_katib.run,             # paper Table 2 / Fig 20
     "roofline": bench_roofline.run,       # deliverable (g)

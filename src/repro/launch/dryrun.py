@@ -115,7 +115,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, zero1=False,
             t0 = time.time()
             compiled = lowered.compile()
             t_compile = time.time() - t0
-        cost = compiled.cost_analysis() or {}
+        cost = roofline.cost_dict(compiled)
         flops = float(cost.get("flops", 0.0))
         byts = float(cost.get("bytes accessed", 0.0))
         scan_fix = (roofline.slstm_correction_flops(

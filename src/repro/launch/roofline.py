@@ -40,6 +40,15 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions: 0.4.x returns a
+    one-element list of per-program dicts, newer releases the dict itself."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(text: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_RE.findall(text):

@@ -80,6 +80,19 @@ def use_mesh(mesh: Optional[Mesh]):
         _state.mesh = prev
 
 
+def abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor.
+
+    jax<=0.4.x takes a single ``((name, size), ...)`` tuple; jax>=0.5 takes
+    ``(axis_sizes, axis_names)``.  Tests build abstract meshes for rule
+    resolution without devices, so they go through this shim."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(names))
+
+
 def _resolve(spec: Sequence[Any], mesh: Mesh) -> P:
     """Map logical axis names to mesh axes present on *mesh*."""
     table = _axis_table()

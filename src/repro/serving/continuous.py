@@ -57,14 +57,20 @@ class ContinuousBatcher:
         self.cache = lm.init_cache(cfg, max_slots, max_len)
         self.slots = [_Slot() for _ in range(max_slots)]
         self.queue: list[Request] = []
+        self.requests: list[Request] = []   # submitted, not yet run()-returned
         self.step_count = 0
+        self._next_rid = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, cfg, t, pos, c))
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: list, max_new: int) -> Request:
-        req = Request(rid=len(self.queue), prompt=list(prompt), max_new=max_new)
+        # rid must be monotonic, not len(queue): admission pops the queue, so
+        # a later submit would reuse a live rid and corrupt run()'s seen-set.
+        req = Request(rid=self._next_rid, prompt=list(prompt), max_new=max_new)
+        self._next_rid += 1
         self.queue.append(req)
+        self.requests.append(req)
         return req
 
     @property
@@ -139,14 +145,21 @@ class ContinuousBatcher:
         self.step_count += 1
 
     def run(self, max_steps: int = 10_000) -> list:
-        """Drain the queue; returns all finished requests."""
+        """Drain the queue; returns requests finished since the last run()
+        (each request is returned exactly once across repeated
+        submit/run cycles, and handed-back requests stop being tracked)."""
         finished: list[Request] = []
-        seen = set()
-        all_reqs = list(self.queue)
-        while (self.queue or self.active) and self.step_count < max_steps:
+
+        def collect():
+            done = [r for r in self.requests if r.done]
+            if done:
+                finished.extend(done)
+                self.requests = [r for r in self.requests if not r.done]
+
+        collect()                      # finished via manual step()s pre-run
+        start = self.step_count        # max_steps bounds THIS call, not the
+        while (self.queue or self.active) \
+                and self.step_count - start < max_steps:   # batcher lifetime
             self.step()
-            for r in all_reqs:
-                if r.done and r.rid not in seen:
-                    seen.add(r.rid)
-                    finished.append(r)
+            collect()
         return finished

@@ -1,0 +1,16 @@
+"""Model-mesh serving gateway: multi-model routing (router.py),
+scale-to-zero autoscaling (autoscaler.py), multi-cloud placement
+(placement.py).  See DESIGN.md §Gateway."""
+from .autoscaler import Autoscaler, AutoscalerConfig
+from .placement import (Assignment, CloudCapacity, ModelDemand, PlacementPlan,
+                        est_p99_s, plan_placement, replicas_needed)
+from .router import (BatcherBackend, Deployment, Gateway, GatewayResult,
+                     Predictor, ServeResult, TrafficSpec)
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig",
+    "Assignment", "CloudCapacity", "ModelDemand", "PlacementPlan",
+    "est_p99_s", "plan_placement", "replicas_needed",
+    "BatcherBackend", "Deployment", "Gateway", "GatewayResult",
+    "Predictor", "ServeResult", "TrafficSpec",
+]

@@ -1,0 +1,50 @@
+"""KPA-style autoscaling policy with scale-to-zero (Cox et al.,
+arXiv:2007.07366: serverless inferencing makes idle scale-down + cold-start
+the defining production behaviors).
+
+The policy is pure decision logic so it unit-tests without the simulator:
+the router observes queue depth / idle time and asks the policy what to do,
+then executes the decision inside the discrete-event loop (router.py).
+
+Scale-up     queue_len > target_queue * pool  (KServe KPA queue-depth rule,
+             same rule InferenceService used pre-gateway).
+Scale-down   a replica idle for idle_window_s is retired, never below
+             min_replicas.  min_replicas=0 enables scale-to-zero.
+Cold start   a replica created after t=0 holds no weights: its first batch
+             pays CloudProfile.model_load_s (cold_scale_up=False restores
+             the legacy InferenceService behavior where the scale-up delay
+             was the whole cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalerConfig:
+    min_replicas: int = 0            # 0 => scale-to-zero allowed
+    max_replicas: int = 4
+    target_queue: int = 16           # per-replica queue-depth target
+    scale_up_delay_s: float = 0.5    # control-plane: pod scheduling + start
+    idle_window_s: float = 1.0       # retire a replica idle this long
+    cold_scale_up: bool = True       # new replicas pay model_load_s
+
+
+class Autoscaler:
+    """Stateless policy over an AutoscalerConfig (per-deployment instance)."""
+
+    def __init__(self, config: AutoscalerConfig | None = None):
+        self.cfg = config or AutoscalerConfig()
+
+    def scale_up_needed(self, queue_len: int, pool: int) -> bool:
+        """pool counts live replicas plus ones already scheduled to start."""
+        return (queue_len > self.cfg.target_queue * max(pool, 1)
+                and pool < self.cfg.max_replicas)
+
+    def can_remove(self, pool: int) -> bool:
+        return pool > self.cfg.min_replicas
+
+    @property
+    def tracks_idle(self) -> bool:
+        return math.isfinite(self.cfg.idle_window_s)

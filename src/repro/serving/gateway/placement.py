@@ -1,0 +1,129 @@
+"""Multi-cloud placement planner (automated placement, MLModelCI analog --
+arXiv:2006.05096): assign models to cloud profiles to minimize cost or p99
+under per-cloud replica capacity.
+
+Sizing is queueing-theoretic, not simulated: a model offering
+``rate * service_time`` Erlangs needs ``ceil(load / target_util)`` replicas,
+and its latency estimate inflates service time by an M/M/1-style waiting
+term per replica.  The plan's capacity map feeds Gateway(capacity=...) so
+the discrete-event simulation enforces what the planner assumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from ...clouds.profiles import CloudProfile
+
+TARGET_UTILIZATION = 0.7
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDemand:
+    name: str
+    rate: float                  # expected offered load, req/s
+    service_time_s: float        # per-request service time at typical batch
+
+    @property
+    def load(self) -> float:
+        return self.rate * self.service_time_s   # Erlangs
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudCapacity:
+    profile: CloudProfile
+    max_replicas: int
+    cost_per_replica_hr: float
+
+
+def replicas_needed(demand: ModelDemand, *,
+                    target_util: float = TARGET_UTILIZATION) -> int:
+    return max(1, math.ceil(demand.load / target_util))
+
+
+def est_p99_s(profile: CloudProfile, demand: ModelDemand,
+              replicas: int) -> float:
+    """rtt + lb + service + 3x an M/M/1-style waiting term at per-replica
+    utilization rho -- a tail estimate, deliberately coarse (the gateway
+    simulation is the ground truth; this only has to rank clouds)."""
+    rho = demand.load / replicas
+    if rho >= 1.0:
+        return math.inf
+    wait = demand.service_time_s * rho / (1.0 - rho)
+    return (profile.network_rtt_s + profile.lb_overhead_s
+            + demand.service_time_s + 3.0 * wait)
+
+
+@dataclasses.dataclass
+class Assignment:
+    model: str
+    cloud: Optional[str]         # None => unplaceable under capacity
+    replicas: int
+    est_p99_s: float
+    cost_hr: float
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    objective: str
+    assignments: list
+    feasible: bool
+
+    @property
+    def total_cost_hr(self) -> float:
+        return sum(a.cost_hr for a in self.assignments if a.cloud)
+
+    @property
+    def worst_p99_s(self) -> float:
+        return max((a.est_p99_s for a in self.assignments if a.cloud),
+                   default=0.0)
+
+    def capacity_map(self) -> dict:
+        """Planned replica budget per cloud, ready for Gateway(capacity=...)."""
+        out: dict = {}
+        for a in self.assignments:
+            if a.cloud:
+                out[a.cloud] = out.get(a.cloud, 0) + a.replicas
+        return out
+
+    def summary(self) -> dict:
+        fin = lambda x: round(x, 6) if math.isfinite(x) else "inf"
+        return {"objective": self.objective, "feasible": self.feasible,
+                "total_cost_hr": round(self.total_cost_hr, 4),
+                "worst_p99_s": fin(self.worst_p99_s),
+                "assignments": {a.model: {
+                    "cloud": a.cloud, "replicas": a.replicas,
+                    "est_p99_s": fin(a.est_p99_s),
+                    "cost_hr": round(a.cost_hr, 4)}
+                    for a in self.assignments}}
+
+
+def plan_placement(models: list, clouds: list,
+                   objective: str = "cost") -> PlacementPlan:
+    """Greedy by offered load, heaviest model first: each model takes the
+    feasible cloud minimizing (cost, p99) or (p99, cost).  Greedy is exact
+    enough at fleet sizes where this repo runs (tens of models, few clouds)
+    and keeps the plan explainable."""
+    assert objective in ("cost", "p99")
+    remaining = {c.profile.name: c.max_replicas for c in clouds}
+    assignments, feasible = [], True
+    for d in sorted(models, key=lambda d: d.load, reverse=True):
+        need = replicas_needed(d)
+        best = None
+        for c in clouds:
+            if remaining[c.profile.name] < need:
+                continue
+            p99 = est_p99_s(c.profile, d, need)
+            cost = need * c.cost_per_replica_hr
+            key = (cost, p99) if objective == "cost" else (p99, cost)
+            if best is None or key < best[0]:
+                best = (key, c, p99, cost)
+        if best is None:
+            feasible = False
+            assignments.append(Assignment(d.name, None, 0, math.inf, 0.0))
+            continue
+        _, c, p99, cost = best
+        remaining[c.profile.name] -= need
+        assignments.append(Assignment(d.name, c.profile.name, need, p99, cost))
+    return PlacementPlan(objective, assignments, feasible)

@@ -1,0 +1,457 @@
+"""Model-mesh serving gateway: one router fronting MANY models.
+
+The pre-gateway repo could stress-test a single InferenceService; this
+package is the fleet layer (ROADMAP north star: "heavy traffic from
+millions of users").  A Gateway owns per-model Deployments -- each a
+backend (Predictor or BatcherBackend), a CloudProfile, a replica pool and
+an Autoscaler -- and runs a mixed multi-model workload (per-model burst /
+Poisson TrafficSpecs) through ONE discrete-event simulation with shared
+per-cloud replica capacity.
+
+The simulation contract is the repo-wide hardware gate (DESIGN.md):
+compute service times are MEASURED on this host (jitted predict per pow2
+batch bucket, or real decode steps for the LLM backend); network RTT /
+load-balancer / model-load constants are SIMULATED from the CloudProfile.
+InferenceService (serving/kserve.py) is now a single-model client of this
+router, so the paper's Table-3 stress test and the fleet simulation share
+one event loop.
+
+Event kinds: "arr" request arrival, "up" replica joins the pool after the
+control-plane delay, "free" replica finishes a batch, "idle" idle-window
+expiry check (scale-down / scale-to-zero, autoscaler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from ...clouds.profiles import CloudProfile
+from ...telemetry.events import EventLog
+from .autoscaler import Autoscaler, AutoscalerConfig
+
+
+# -- results / backends (moved from kserve.py; it re-exports them) ----------
+
+@dataclasses.dataclass
+class ServeResult:
+    strategy: str
+    n_requests: int
+    total_time_s: float
+    latencies_s: list
+    replica_trace: list = dataclasses.field(default_factory=list)
+    per_version: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def p50(self):
+        return float(np.percentile(self.latencies_s, 50))
+
+    @property
+    def p99(self):
+        return float(np.percentile(self.latencies_s, 99))
+
+    def summary(self) -> dict:
+        return {"strategy": self.strategy, "n": self.n_requests,
+                "total_s": round(self.total_time_s, 4),
+                "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
+                "replicas_max": max([r for _, r in self.replica_trace], default=1),
+                **({"per_version": self.per_version} if self.per_version else {})}
+
+
+class Predictor:
+    """A deployable model version: jitted predict over a batch of inputs."""
+
+    def __init__(self, name: str, predict_fn: Callable, example_input: Any):
+        self.name = name
+        self.predict_fn = predict_fn
+        self.example_input = example_input
+        self._lat_cache: dict[int, float] = {}
+
+    def _batch_of(self, b: int):
+        x = self.example_input
+        reps = [b] + [1] * (np.ndim(x) - 1)
+        return np.tile(x[:1], reps)
+
+    def warmup(self, batch_sizes=(1,)):
+        for b in batch_sizes:
+            self.service_time(b)
+
+    def service_time(self, b: int) -> float:
+        """Measured wall latency of a predict on this host, at b rounded up
+        to its pow2 bucket (jit retrace control lives HERE, not in the
+        router: analytic backends like BatcherBackend price exact b)."""
+        b = _pow2(b)
+        if b not in self._lat_cache:
+            x = self._batch_of(b)
+            out = self.predict_fn(x)
+            jax_block(out)                       # compile
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax_block(self.predict_fn(x))
+            self._lat_cache[b] = (time.perf_counter() - t0) / 3
+        return self._lat_cache[b]
+
+    def predict(self, x):
+        return self.predict_fn(x)
+
+
+class BatcherBackend:
+    """Adapt a ContinuousBatcher (serving/continuous.py) as a router backend.
+
+    An LLM's unit of work is decode steps, not one jitted call: a request
+    costs ``prompt_len + gen_tokens`` steps (teacher-forced catch-up, then
+    generation), and b concurrent requests run in ``ceil(b / max_slots)``
+    slot waves.  Per-step wall time is measured once by draining a real
+    request through the batcher (after a jit warmup drain), keeping the
+    compute term hardware-true like Predictor.service_time.
+    """
+
+    def __init__(self, name: str, batcher, *, prompt_len: int = 8,
+                 gen_tokens: int = 8):
+        self.name = name
+        self.batcher = batcher
+        self.prompt_len = prompt_len
+        self.gen_tokens = gen_tokens
+        self._step_time: Optional[float] = None
+
+    def _measure(self) -> float:
+        prompt = [1 + (i % 97) for i in range(self.prompt_len)]
+        self.batcher.submit(prompt, self.gen_tokens)
+        self.batcher.run()                       # warmup: jit compile
+        steps0 = self.batcher.step_count
+        self.batcher.submit(prompt, self.gen_tokens)
+        t0 = time.perf_counter()
+        self.batcher.run()
+        dt = time.perf_counter() - t0
+        return dt / max(self.batcher.step_count - steps0, 1)
+
+    def service_time(self, b: int) -> float:
+        if self._step_time is None:
+            self._step_time = self._measure()
+        waves = math.ceil(b / self.batcher.max_slots)
+        return waves * (self.prompt_len + self.gen_tokens) * self._step_time
+
+    def generate(self, prompts: list, max_new: int) -> list:
+        """Real generation passthrough (not simulated)."""
+        reqs = [self.batcher.submit(list(p), max_new) for p in prompts]
+        self.batcher.run()
+        return [r.output for r in reqs]
+
+
+def jax_block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+
+
+def _pow2(b: int) -> int:
+    """Measure service times on pow2 batch buckets (jit retrace control)."""
+    n = 1
+    while n < b:
+        n *= 2
+    return n
+
+
+# -- workload / deployment ---------------------------------------------------
+
+@dataclasses.dataclass
+class TrafficSpec:
+    """One arrival stream for one model.  Several specs may target the same
+    model (e.g. two bursts separated by more than the idle window to force
+    a scale-to-zero -> cold-start cycle)."""
+    model: str
+    n: int
+    arrival: str = "burst"               # "burst" | "poisson"
+    rate: float = 0.0                    # poisson req/s
+    start_s: float = 0.0
+    arrivals: Optional[Any] = None       # explicit times override generation
+
+    def gen(self, rng) -> np.ndarray:
+        if self.arrivals is not None:
+            return np.asarray(self.arrivals, float)
+        if self.arrival == "burst":
+            return np.full(self.n, float(self.start_s))
+        if self.arrival == "poisson":
+            gaps = rng.exponential(1.0 / max(self.rate, 1e-9), self.n)
+            return self.start_s + np.cumsum(gaps)
+        raise ValueError(f"unknown arrival kind {self.arrival!r}")
+
+
+@dataclasses.dataclass
+class Deployment:
+    name: str
+    backend: Any                         # .name + .service_time(b) -> s
+    profile: CloudProfile
+    autoscaler: Autoscaler
+    max_batch: int = 32
+    canary: Any = None
+    canary_fraction: float = 0.0
+
+    @property
+    def backends(self) -> list:
+        return [self.backend] + ([self.canary] if self.canary is not None
+                                 else [])
+
+
+@dataclasses.dataclass
+class _Replica:
+    rid: int
+    warm: bool                           # cold replicas pay model_load_s once
+    busy: bool = False
+    last_active: float = 0.0
+
+
+class _ModelState:
+    def __init__(self, dep: Deployment, arr: np.ndarray, ver: np.ndarray):
+        self.dep = dep
+        self.arr = arr
+        self.ver = ver
+        self.lat = np.full(len(arr), -1.0)
+        self.pending: dict[int, list] = {v: [] for v in range(len(dep.backends))}
+        self.replicas: dict[int, _Replica] = {}
+        self.scheduled_up = 0
+        self.next_rid = 0
+        self.trace: list = []
+        self.cold_starts = 0
+        self.per_version: dict[str, int] = {}
+        self.served = 0
+
+    @property
+    def pool(self) -> int:
+        return len(self.replicas) + self.scheduled_up
+
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self.pending.values())
+
+
+@dataclasses.dataclass
+class GatewayResult:
+    per_model: dict                      # name -> ServeResult
+    cold_starts: dict                    # name -> int
+    makespan_s: float
+
+    def summary(self) -> dict:
+        return {"makespan_s": round(self.makespan_s, 4),
+                "cold_starts": dict(self.cold_starts),
+                "models": {m: r.summary() for m, r in self.per_model.items()}}
+
+
+# -- the router --------------------------------------------------------------
+
+class Gateway:
+    """Routes a mixed multi-model workload to per-model replica pools.
+
+    capacity: optional {cloud_name: max_total_replicas} shared across every
+    deployment placed on that cloud -- the knob the placement planner
+    (placement.py) sizes against.  The cap bounds ELASTIC scale-up
+    (over-budget requests are denied and logged gateway:scale_denied);
+    run() rejects a configuration whose baseline min_replicas pools
+    already exceed it, and a scale-from-zero launch that would otherwise
+    starve forever proceeds over budget with a gateway:capacity_exceeded
+    event (the K8s analog: the pod pends, then preempts -- we choose
+    serve-and-log so the simulation always completes).
+    """
+
+    def __init__(self, *, capacity: Optional[dict] = None,
+                 log: Optional[EventLog] = None):
+        self.deployments: dict[str, Deployment] = {}
+        self.capacity = dict(capacity or {})
+        self.log = log or EventLog()
+
+    def deploy(self, name: str, backend, profile: CloudProfile, *,
+               autoscaler=None, max_batch: int = 32,
+               canary=None, canary_fraction: float = 0.0) -> Deployment:
+        if isinstance(autoscaler, AutoscalerConfig):
+            autoscaler = Autoscaler(autoscaler)
+        dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
+                         max_batch, canary, canary_fraction)
+        self.deployments[name] = dep
+        return dep
+
+    # -- discrete-event loop ------------------------------------------------
+    def run(self, traffic: list, seed: int = 0) -> GatewayResult:
+        rng = np.random.default_rng(seed)
+        by_model: dict[str, list] = {}
+        for spec in traffic:
+            if spec.model not in self.deployments:
+                raise KeyError(f"no deployment named {spec.model!r}")
+            by_model.setdefault(spec.model, []).append(spec)
+
+        base: dict[str, int] = {}        # cloud -> baseline min_replicas,
+        for dep in self.deployments.values():   # over EVERY deployment: an
+            base[dep.profile.name] = (base.get(dep.profile.name, 0)  # idle
+                                      + dep.autoscaler.cfg.min_replicas)
+        for cloud, n in base.items():    # pool still holds cloud capacity
+            cap = self.capacity.get(cloud)
+            if cap is not None and n > cap:
+                raise ValueError(
+                    f"min_replicas on {cloud!r} total {n} > capacity {cap}")
+
+        events: list = []                # (t, seq, kind, model, payload)
+        seq = itertools.count()
+        st: dict[str, _ModelState] = {}
+        for m, dep in self.deployments.items():
+            specs = by_model.get(m, [])
+            arr = (np.sort(np.concatenate([s.gen(rng) for s in specs]))
+                   if specs else np.zeros(0))
+            ver = np.zeros(len(arr), int)
+            if dep.canary is not None and dep.canary_fraction > 0:
+                ver = (rng.random(len(arr)) < dep.canary_fraction).astype(int)
+            s = st[m] = _ModelState(dep, arr, ver)
+            for _ in range(dep.autoscaler.cfg.min_replicas):
+                s.replicas[s.next_rid] = _Replica(s.next_rid, warm=True)
+                s.next_rid += 1
+            s.trace.append((0.0, len(s.replicas)))
+            for i, t in enumerate(arr):
+                heapq.heappush(events, (float(t), next(seq), "arr", m, i))
+
+        with self.log.stage("gateway:run", models=sorted(by_model),
+                            n=int(sum(len(x.arr) for x in st.values()))):
+            while events:
+                t = events[0][0]
+                touched, idle_checks = set(), []
+                # apply every state change at time t before dispatching so a
+                # burst admits as full batches (pre-gateway sim semantics);
+                # idle expiries run last so a coincident arrival wins the
+                # replica instead of forcing a retire + cold start
+                while events and events[0][0] == t:
+                    _, _, kind, m, data = heapq.heappop(events)
+                    s = st[m]
+                    if kind == "arr":
+                        s.pending[int(s.ver[data])].append(data)
+                        touched.add(m)
+                    elif kind == "up":
+                        s.scheduled_up -= 1
+                        warm = not s.dep.autoscaler.cfg.cold_scale_up
+                        s.replicas[s.next_rid] = _Replica(
+                            s.next_rid, warm=warm, last_active=t)
+                        if s.dep.autoscaler.tracks_idle:
+                            # a replica that joins after the queue drained
+                            # would otherwise never get an idle check
+                            heapq.heappush(events, (
+                                t + s.dep.autoscaler.cfg.idle_window_s,
+                                next(seq), "idle", m, (s.next_rid, t)))
+                        s.next_rid += 1
+                        touched.add(m)
+                    elif kind == "free":
+                        r = s.replicas.get(data)
+                        if r is not None:
+                            r.busy = False
+                            r.last_active = t
+                            if s.dep.autoscaler.tracks_idle:
+                                heapq.heappush(events, (
+                                    t + s.dep.autoscaler.cfg.idle_window_s,
+                                    next(seq), "idle", m, (data, t)))
+                            touched.add(m)
+                    else:                # "idle"
+                        idle_checks.append((m, data))
+                for m in touched:
+                    self._dispatch(st[m], t, events, seq)
+                    self._autoscale(st[m], t, events, seq, st)
+                for m, payload in idle_checks:
+                    self._maybe_retire(st[m], t, payload)
+
+        results, cold, makespan = {}, {}, 0.0
+        for m, s in st.items():
+            if not len(s.arr):           # deployed but untrafficked: holds
+                continue                 # capacity, reports no results
+            if s.served < len(s.arr):
+                raise RuntimeError(
+                    f"gateway stalled: {m} served {s.served}/{len(s.arr)}")
+            total = max((float(s.arr[i] + s.lat[i]) for i in range(len(s.arr))),
+                        default=0.0)
+            makespan = max(makespan, total)
+            results[m] = ServeResult(f"gateway:{m}", len(s.arr), total,
+                                     s.lat.tolist(), s.trace,
+                                     per_version=s.per_version)
+            cold[m] = s.cold_starts
+        return GatewayResult(results, cold, makespan)
+
+    def _dispatch(self, s: _ModelState, t: float, events, seq) -> None:
+        dep = s.dep
+        while True:
+            idle = [r for r in s.replicas.values() if not r.busy]
+            if not idle:
+                return
+            v = max(s.pending, key=lambda k: len(s.pending[k]))
+            take = s.pending[v][:dep.max_batch]
+            if not take:
+                return
+            s.pending[v] = s.pending[v][len(take):]
+            r = min(idle, key=lambda x: x.rid)
+            cold = 0.0
+            if not r.warm:
+                cold = dep.profile.model_load_s
+                r.warm = True
+                s.cold_starts += 1
+                self.log.record("gateway:cold_start", cold, model=dep.name,
+                                t_sim=round(t, 6))
+            backend = dep.backends[v]
+            b = len(take)
+            done = (t + dep.profile.network_rtt_s + dep.profile.lb_overhead_s
+                    + cold + backend.service_time(b))
+            for i in take:
+                s.lat[i] = done - s.arr[i]
+            s.served += b
+            s.per_version[backend.name] = s.per_version.get(backend.name, 0) + b
+            r.busy = True
+            r.last_active = done
+            heapq.heappush(events, (done, next(seq), "free", dep.name, r.rid))
+
+    def _autoscale(self, s: _ModelState, t: float, events, seq, st) -> None:
+        q = s.queue_len()
+        if q > 0 and s.pool == 0:        # scale from zero: spin up one
+            self._launch(s, t, events, seq, st, from_zero=True)
+            return
+        # at most ONE launch per evaluation (KPA rate-limits scale-up; also
+        # the pre-gateway sim's cadence of one replica per batch completion,
+        # which the legacy InferenceService path depends on)
+        if s.dep.autoscaler.scale_up_needed(q, s.pool):
+            self._launch(s, t, events, seq, st)
+
+    def _cloud_usage(self, st, cloud: str) -> int:
+        return sum(x.pool for x in st.values()
+                   if x.dep.profile.name == cloud)
+
+    def _launch(self, s: _ModelState, t: float, events, seq, st, *,
+                from_zero: bool = False) -> bool:
+        cloud = s.dep.profile.name
+        cap = self.capacity.get(cloud)
+        if cap is not None and self._cloud_usage(st, cloud) >= cap:
+            if not from_zero:
+                self.log.record("gateway:scale_denied", 0.0, model=s.dep.name,
+                                cloud=cloud, t_sim=round(t, 6))
+                return False
+            # a deployment at pool 0 would starve forever if every other
+            # pool on this cloud is warm-pinned: serve over budget, loudly
+            self.log.record("gateway:capacity_exceeded", 0.0,
+                            model=s.dep.name, cloud=cloud, t_sim=round(t, 6))
+        delay = s.dep.autoscaler.cfg.scale_up_delay_s
+        s.scheduled_up += 1
+        s.trace.append((t, s.pool))
+        heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name, None))
+        self.log.record("gateway:scale_up", delay, model=s.dep.name,
+                        t_sim=round(t, 6), pool=s.pool, from_zero=from_zero)
+        return True
+
+    def _maybe_retire(self, s: _ModelState, t: float, payload) -> None:
+        rid, stamp = payload
+        r = s.replicas.get(rid)
+        if r is None or r.busy or r.last_active > stamp:
+            return                       # reused since the check was scheduled
+        if not s.dep.autoscaler.can_remove(s.pool):
+            return
+        del s.replicas[rid]
+        s.trace.append((t, s.pool))
+        self.log.record("gateway:scale_down", 0.0, model=s.dep.name,
+                        t_sim=round(t, 6), pool=s.pool)
+        if s.pool == 0:
+            self.log.record("gateway:scale_to_zero", 0.0, model=s.dep.name,
+                            t_sim=round(t, 6))

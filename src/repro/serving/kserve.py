@@ -1,5 +1,4 @@
-"""KServe analog: InferenceService with four deployment strategies and a
-discrete-event serving simulator.
+"""KServe analog: InferenceService with four deployment strategies.
 
 Strategies (paper Table 3 columns):
   baremetal -- model re-loaded on EVERY request, no batching, sequential
@@ -12,87 +11,26 @@ Strategies (paper Table 3 columns):
 Compute latencies are REAL (measured from the jitted predictor on this
 host, per batch size, cached); network RTT / model-load / LB constants come
 from the CloudProfile (simulated, calibrated to the paper's ratios --
-DESIGN.md records this as the hardware-gate simulation).  The autoscaler is
-a queue-depth rule evaluated at batch completions (KServe/KPA-style).
+DESIGN.md records this as the hardware-gate simulation).
+
+The discrete-event machinery now lives in serving/gateway/router.py (the
+multi-model fleet layer); InferenceService is its single-model client:
+one Deployment, legacy KPA knobs (min_replicas >= 1, no idle scale-down,
+warm scale-up).  Predictor / ServeResult are re-exported from there for
+backward compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import time
-from typing import Any, Callable, Optional
+import math
+from typing import Optional
 
 import numpy as np
 
 from ..clouds.profiles import CloudProfile
 from ..telemetry.events import EventLog
-
-
-@dataclasses.dataclass
-class ServeResult:
-    strategy: str
-    n_requests: int
-    total_time_s: float
-    latencies_s: list
-    replica_trace: list = dataclasses.field(default_factory=list)
-    per_version: dict = dataclasses.field(default_factory=dict)
-
-    @property
-    def p50(self):
-        return float(np.percentile(self.latencies_s, 50))
-
-    @property
-    def p99(self):
-        return float(np.percentile(self.latencies_s, 99))
-
-    def summary(self) -> dict:
-        return {"strategy": self.strategy, "n": self.n_requests,
-                "total_s": round(self.total_time_s, 4),
-                "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
-                "replicas_max": max([r for _, r in self.replica_trace], default=1),
-                **({"per_version": self.per_version} if self.per_version else {})}
-
-
-class Predictor:
-    """A deployable model version: jitted predict over a batch of inputs."""
-
-    def __init__(self, name: str, predict_fn: Callable, example_input: Any):
-        self.name = name
-        self.predict_fn = predict_fn
-        self.example_input = example_input
-        self._lat_cache: dict[int, float] = {}
-
-    def _batch_of(self, b: int):
-        x = self.example_input
-        reps = [b] + [1] * (np.ndim(x) - 1)
-        return np.tile(x[:1], reps)
-
-    def warmup(self, batch_sizes=(1,)):
-        for b in batch_sizes:
-            self.service_time(b)
-
-    def service_time(self, b: int) -> float:
-        """Measured wall latency of a size-b predict on this host."""
-        if b not in self._lat_cache:
-            x = self._batch_of(b)
-            out = self.predict_fn(x)
-            jax_block(out)                       # compile
-            t0 = time.perf_counter()
-            for _ in range(3):
-                jax_block(self.predict_fn(x))
-            self._lat_cache[b] = (time.perf_counter() - t0) / 3
-        return self._lat_cache[b]
-
-    def predict(self, x):
-        return self.predict_fn(x)
-
-
-def jax_block(x):
-    try:
-        import jax
-        jax.block_until_ready(x)
-    except Exception:
-        pass
+from .gateway.autoscaler import AutoscalerConfig
+from .gateway.router import (Gateway, Predictor, ServeResult,  # noqa: F401
+                             TrafficSpec, _pow2, jax_block)
 
 
 class InferenceService:
@@ -145,68 +83,21 @@ class InferenceService:
             lat.append(l)
         return ServeResult(self.strategy, n, clock, lat, [(0.0, 1)])
 
-    # -- discrete-event simulation of batched, autoscaled serving ----------
     def _kserve_sim(self, n: int, seed: int = 0, arrivals=None) -> ServeResult:
-        """arrivals: None = burst at t=0 (paper); else per-request arrival
-        times.  Latency = completion - arrival (queueing included)."""
-        p = self.profile
-        rng = np.random.default_rng(seed)
-        # request -> version routing (canary split)
-        versions = np.full(n, 0)
-        if self.canary is not None and self.canary_fraction > 0:
-            versions = (rng.random(n) < self.canary_fraction).astype(int)
-        preds = [self.predictor] + ([self.canary] if self.canary else [])
-        arr = np.zeros(n) if arrivals is None else np.asarray(arrivals)
-        order = np.argsort(arr)
-        pending: dict = {v: [] for v in range(len(preds))}
-        next_arrival = 0                       # index into `order`
-        lat = [0.0] * n
-        trace = [(0.0, self.min_replicas)]
-        free_at = [0.0] * self.min_replicas    # replica availability times
-        heapq.heapify(free_at)
-        per_version: dict[str, int] = {}
-        served = 0
-        while served < n:
-            t_free = free_at[0]
-            # admit every request that has arrived by the replica-free time;
-            # if none pending, fast-forward to the next arrival
-            while next_arrival < len(order) and \
-                    (arr[order[next_arrival]] <= t_free
-                     or not any(pending.values())):
-                i = int(order[next_arrival])
-                pending[int(versions[i])].append(i)
-                next_arrival += 1
-            clock = max(heapq.heappop(free_at),
-                        min((arr[i] for q in pending.values() for i in q),
-                            default=0.0))
-            v = max(pending, key=lambda k: len(pending[k]))
-            take = pending[v][:self.max_batch]
-            pending[v] = pending[v][len(take):]
-            if not take:
-                heapq.heappush(free_at, clock)
-                continue
-            b = len(take)
-            service = preds[v].service_time(_pow2(b))
-            done = clock + p.network_rtt_s + p.lb_overhead_s + service
-            for i in take:
-                lat[i] = done - arr[i]
-            served += b
-            per_version[preds[v].name] = per_version.get(preds[v].name, 0) + b
-            heapq.heappush(free_at, done)
-            queue_len = sum(len(q) for q in pending.values())
-            # KPA-style scale-up on queue depth
-            if queue_len > self.target_queue * len(free_at) and \
-               len(free_at) < self.max_replicas:
-                heapq.heappush(free_at, clock + self.scale_up_delay_s)
-                trace.append((clock, len(free_at)))
-        total = max(arr[i] + lat[i] for i in range(n)) if n else 0.0
-        return ServeResult(self.strategy, n, total, lat, trace,
-                           per_version=per_version)
-
-
-def _pow2(b: int) -> int:
-    """Measure service times on pow2 batch buckets (jit retrace control)."""
-    n = 1
-    while n < b:
-        n *= 2
-    return n
+        """One-model gateway run with the legacy KPA semantics: replicas
+        never idle out (idle_window=inf) and scale-ups arrive warm (the
+        scale-up delay stands in for scheduling + load, as pre-gateway)."""
+        cfg = AutoscalerConfig(min_replicas=self.min_replicas,
+                               max_replicas=self.max_replicas,
+                               target_queue=self.target_queue,
+                               scale_up_delay_s=self.scale_up_delay_s,
+                               idle_window_s=math.inf, cold_scale_up=False)
+        gw = Gateway(log=self.log)
+        gw.deploy(self.predictor.name, self.predictor, self.profile,
+                  autoscaler=cfg, max_batch=self.max_batch,
+                  canary=self.canary, canary_fraction=self.canary_fraction)
+        res = gw.run([TrafficSpec(self.predictor.name, n, arrivals=arrivals)],
+                     seed=seed).per_model[self.predictor.name]
+        return ServeResult(self.strategy, n, res.total_time_s,
+                           res.latencies_s, res.replica_trace,
+                           per_version=res.per_version)

@@ -87,6 +87,44 @@ def test_ssm_state_reset_on_admission():
     assert tgt.output == want
 
 
+def test_submit_rids_stay_unique_after_admission(setup):
+    """Regression: rid=len(queue) reused rids once admission popped the
+    queue, corrupting run()'s seen-set; rids must be monotonic."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, max_slots=1, max_len=64)
+    r1 = cb.submit([1, 2], max_new=2)
+    cb.step()                        # admits r1 -> queue drains to empty
+    r2 = cb.submit([3, 4], max_new=2)
+    assert r1.rid != r2.rid
+    done = cb.run()
+    assert {r.rid for r in done} == {r1.rid, r2.rid}
+    assert r1.done and r2.done
+
+
+def test_run_returns_each_request_exactly_once(setup):
+    """Repeated submit/run cycles: a request finished and returned by one
+    run() must not be returned again by the next (and stops being
+    tracked, so long-lived batchers don't accumulate requests)."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, max_slots=1, max_len=64)
+    r1 = cb.submit([1, 2], max_new=2)
+    assert [r.rid for r in cb.run()] == [r1.rid]
+    r2 = cb.submit([3, 4], max_new=2)
+    assert [r.rid for r in cb.run()] == [r2.rid]
+    assert cb.requests == []
+
+
+def test_max_steps_bounds_each_run_call(setup):
+    """max_steps is a per-call budget: a long-lived batcher must keep
+    draining on later run() calls, not die at a lifetime step cap."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, max_slots=1, max_len=64)
+    r = cb.submit([1, 2, 3], max_new=4)          # needs 7 steps total
+    assert cb.run(max_steps=4) == []             # budget exhausted mid-flight
+    done = cb.run(max_steps=50)                  # fresh budget resumes
+    assert [x.rid for x in done] == [r.rid] and r.done
+
+
 def test_eos_frees_slot_early(setup):
     cfg, params = setup
     cb = ContinuousBatcher(cfg, params, max_slots=1, max_len=64, eos_id=None)

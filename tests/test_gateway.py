@@ -1,0 +1,273 @@
+"""Model-mesh gateway: multi-model routing, scale-to-zero autoscaling with
+cold starts, shared per-cloud capacity, and multi-cloud placement."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.clouds.profiles import get_profile
+from repro.serving.gateway import (AutoscalerConfig, BatcherBackend,
+                                   CloudCapacity, Gateway, ModelDemand,
+                                   Predictor, TrafficSpec, plan_placement,
+                                   replicas_needed)
+from repro.telemetry.events import EventLog
+
+
+def make_predictor(name="m", cost_s=0.0):
+    import time
+
+    def predict(x):
+        if cost_s:
+            time.sleep(cost_s)
+        return x.sum(axis=tuple(range(1, x.ndim)))
+
+    return Predictor(name, predict, np.zeros((1, 4), np.float32))
+
+
+def warm_config(**kw):
+    """Legacy-style pool: starts warm, never idles out."""
+    return AutoscalerConfig(min_replicas=kw.pop("min_replicas", 1),
+                            idle_window_s=kw.pop("idle_window_s", math.inf),
+                            **kw)
+
+
+def test_multi_model_all_served_exactly_once():
+    gw = Gateway()
+    for name in ("a", "b", "c"):
+        gw.deploy(name, make_predictor(name), get_profile("gcp"),
+                  autoscaler=warm_config(), max_batch=8)
+    out = gw.run([TrafficSpec("a", 100),
+                  TrafficSpec("b", 50, arrival="poisson", rate=200.0),
+                  TrafficSpec("c", 25)], seed=0)
+    assert set(out.per_model) == {"a", "b", "c"}
+    for name, n in (("a", 100), ("b", 50), ("c", 25)):
+        res = out.per_model[name]
+        assert res.n_requests == n
+        assert len(res.latencies_s) == n
+        assert all(l > 0 for l in res.latencies_s)
+        assert sum(res.per_version.values()) == n
+    assert out.makespan_s >= max(r.total_time_s for r in out.per_model.values()) - 1e-12
+
+
+def test_multiple_specs_for_one_model_concatenate():
+    gw = Gateway()
+    gw.deploy("a", make_predictor("a"), get_profile("gcp"),
+              autoscaler=warm_config())
+    out = gw.run([TrafficSpec("a", 10), TrafficSpec("a", 10, start_s=1.0)])
+    assert out.per_model["a"].n_requests == 20
+
+
+def test_scale_to_zero_cold_start_cycle():
+    """min_replicas=0: burst -> cold start, idle out to zero, second burst
+    pays a second cold start (Cox et al. serverless-inferencing behavior)."""
+    log = EventLog()
+    prof = get_profile("gcp")
+    gw = Gateway(log=log)
+    gw.deploy("m", make_predictor("m"), prof,
+              autoscaler=AutoscalerConfig(min_replicas=0, max_replicas=2,
+                                          scale_up_delay_s=0.5,
+                                          idle_window_s=0.5))
+    out = gw.run([TrafficSpec("m", 8), TrafficSpec("m", 8, start_s=10.0)])
+    assert out.cold_starts["m"] == 2
+    trace = out.per_model["m"].replica_trace
+    assert trace[0] == (0.0, 0)
+    pools = [p for _, p in trace]
+    assert 0 in pools[1:]                # scaled back to zero mid-run
+    names = [e["name"] for e in log.events]
+    assert names.count("gateway:cold_start") == 2
+    assert "gateway:scale_to_zero" in names
+    # first request of each burst pays control-plane delay + model load
+    lat = out.per_model["m"].latencies_s
+    assert max(lat[:8]) >= 0.5 + prof.model_load_s
+    assert max(lat[8:]) >= 0.5 + prof.model_load_s
+
+
+def test_cold_start_penalty_matches_profile_constants():
+    prof = get_profile("gcp")
+    warm = Gateway()
+    warm.deploy("m", make_predictor("m"), prof, autoscaler=warm_config())
+    lat_warm = warm.run([TrafficSpec("m", 1)]).per_model["m"].latencies_s[0]
+    cold = Gateway()
+    cold.deploy("m", make_predictor("m"), prof,
+                autoscaler=AutoscalerConfig(min_replicas=0,
+                                            scale_up_delay_s=0.5,
+                                            idle_window_s=1.0))
+    lat_cold = cold.run([TrafficSpec("m", 1)]).per_model["m"].latencies_s[0]
+    penalty = lat_cold - lat_warm
+    assert abs(penalty - (0.5 + prof.model_load_s)) < 0.02
+
+
+def test_idle_replicas_retire_back_to_min():
+    gw = Gateway()
+    gw.deploy("m", make_predictor("m", cost_s=0.002), get_profile("gcp"),
+              autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                          target_queue=4, idle_window_s=0.5),
+              max_batch=4)
+    out = gw.run([TrafficSpec("m", 128)])
+    trace = out.per_model["m"].replica_trace
+    assert max(p for _, p in trace) > 1          # scaled up under the burst
+    assert trace[-1][1] == 1                     # decayed back to min
+
+
+def test_shared_cloud_capacity_is_enforced():
+    log = EventLog()
+    gw = Gateway(capacity={"gcp": 3}, log=log)
+    for name in ("a", "b"):
+        gw.deploy(name, make_predictor(name, cost_s=0.002), get_profile("gcp"),
+                  autoscaler=warm_config(max_replicas=4, target_queue=2),
+                  max_batch=2)
+    out = gw.run([TrafficSpec("a", 64), TrafficSpec("b", 64)])
+    # replay the two traces together: total pool never exceeds the cap
+    merged = sorted((t, name, p) for name in ("a", "b")
+                    for t, p in out.per_model[name].replica_trace)
+    cur, peak = {"a": 0, "b": 0}, 0
+    for _, name, p in merged:
+        cur[name] = p
+        peak = max(peak, cur["a"] + cur["b"])
+    assert peak <= 3
+    assert any(e["name"] == "gateway:scale_denied" for e in log.events)
+    assert all(out.per_model[m].n_requests == 64 for m in ("a", "b"))
+
+
+def test_scale_from_zero_not_starved_by_warm_pools():
+    """A cloud pinned full by never-idling pools must not deadlock a
+    scale-to-zero deployment: its first replica launches over budget and
+    the breach is logged (gateway:capacity_exceeded)."""
+    log = EventLog()
+    gw = Gateway(capacity={"gcp": 1}, log=log)
+    gw.deploy("warm", make_predictor("warm"), get_profile("gcp"),
+              autoscaler=warm_config(min_replicas=1))
+    gw.deploy("cold", make_predictor("cold"), get_profile("gcp"),
+              autoscaler=AutoscalerConfig(min_replicas=0, idle_window_s=1.0))
+    out = gw.run([TrafficSpec("warm", 4), TrafficSpec("cold", 4)])
+    assert out.per_model["cold"].n_requests == 4
+    assert all(l > 0 for l in out.per_model["cold"].latencies_s)
+    assert any(e["name"] == "gateway:capacity_exceeded" for e in log.events)
+
+
+def test_min_replicas_over_capacity_rejected_up_front():
+    gw = Gateway(capacity={"gcp": 1})
+    for name in ("a", "b"):
+        gw.deploy(name, make_predictor(name), get_profile("gcp"),
+                  autoscaler=warm_config(min_replicas=1))
+    with pytest.raises(ValueError, match="capacity"):
+        gw.run([TrafficSpec("a", 2), TrafficSpec("b", 2)])
+
+
+def test_untrafficked_deployment_still_holds_capacity():
+    """A deployed model that gets no traffic this run keeps its warm pool,
+    which counts against the shared cloud cap (and the baseline check)."""
+    log = EventLog()
+    gw = Gateway(capacity={"gcp": 2}, log=log)
+    gw.deploy("quiet", make_predictor("quiet"), get_profile("gcp"),
+              autoscaler=warm_config(min_replicas=1))
+    gw.deploy("busy", make_predictor("busy", cost_s=0.002), get_profile("gcp"),
+              autoscaler=warm_config(max_replicas=4, target_queue=2),
+              max_batch=2)
+    out = gw.run([TrafficSpec("busy", 64)])
+    assert "quiet" not in out.per_model          # no traffic -> no results
+    assert max(p for _, p in out.per_model["busy"].replica_trace) == 1
+    assert any(e["name"] == "gateway:scale_denied" for e in log.events)
+
+    strict = Gateway(capacity={"gcp": 1})
+    strict.deploy("quiet", make_predictor("quiet"), get_profile("gcp"),
+                  autoscaler=warm_config(min_replicas=1))
+    strict.deploy("busy", make_predictor("busy"), get_profile("gcp"),
+                  autoscaler=warm_config(min_replicas=1))
+    with pytest.raises(ValueError, match="capacity"):
+        strict.run([TrafficSpec("busy", 2)])
+
+
+def test_canary_split_through_gateway():
+    gw = Gateway()
+    gw.deploy("m", make_predictor("stable"), get_profile("gcp"),
+              autoscaler=warm_config(), canary=make_predictor("canary"),
+              canary_fraction=0.3)
+    res = gw.run([TrafficSpec("m", 500)], seed=11).per_model["m"]
+    assert sum(res.per_version.values()) == 500
+    assert 0.2 < res.per_version.get("canary", 0) / 500 < 0.4
+
+
+def test_unknown_model_raises():
+    gw = Gateway()
+    with pytest.raises(KeyError):
+        gw.run([TrafficSpec("ghost", 4)])
+
+
+# -- placement ---------------------------------------------------------------
+
+def _clouds(gcp_cost=1.0, ibm_cost=2.0, cap=8):
+    return [CloudCapacity(get_profile("gcp"), cap, gcp_cost),
+            CloudCapacity(get_profile("ibm"), cap, ibm_cost)]
+
+
+def test_replicas_needed_sizing():
+    assert replicas_needed(ModelDemand("m", rate=10.0, service_time_s=0.1)) == 2
+    assert replicas_needed(ModelDemand("m", rate=0.01, service_time_s=0.01)) == 1
+
+
+def test_placement_objective_cost_vs_p99():
+    models = [ModelDemand("m", rate=20.0, service_time_s=0.05)]
+    cheap = plan_placement(models, _clouds(), objective="cost")
+    fast = plan_placement(models, _clouds(), objective="p99")
+    assert cheap.assignments[0].cloud == "gcp"       # cheaper replicas
+    assert fast.assignments[0].cloud == "ibm"        # same-VPC lower RTT
+    assert cheap.total_cost_hr < fast.total_cost_hr
+    assert fast.worst_p99_s < cheap.worst_p99_s
+
+
+def test_placement_respects_capacity_and_flags_infeasible():
+    # both models need 3 replicas; capacities 3 + 1 can only hold one
+    models = [ModelDemand("big", rate=40.0, service_time_s=0.05),
+              ModelDemand("big2", rate=38.0, service_time_s=0.05)]
+    clouds = [CloudCapacity(get_profile("gcp"), 3, 1.0),
+              CloudCapacity(get_profile("ibm"), 1, 2.0)]
+    plan = plan_placement(models, clouds, objective="cost")
+    assert not plan.feasible
+    placed = [a for a in plan.assignments if a.cloud]
+    unplaced = [a for a in plan.assignments if a.cloud is None]
+    assert len(placed) == 1 and len(unplaced) == 1
+    assert placed[0].model == "big"                  # heaviest placed first
+
+
+def test_placement_capacity_map_feeds_gateway():
+    models = [ModelDemand("a", rate=20.0, service_time_s=0.05),
+              ModelDemand("b", rate=10.0, service_time_s=0.05)]
+    plan = plan_placement(models, _clouds(), objective="cost")
+    assert plan.feasible
+    cap = plan.capacity_map()
+    assert sum(cap.values()) == sum(a.replicas for a in plan.assignments)
+    gw = Gateway(capacity=cap)      # planner budget enforced by the router
+    assert gw.capacity == cap
+
+
+def test_placement_overload_estimate_is_inf():
+    from repro.serving.gateway import est_p99_s
+    d = ModelDemand("m", rate=100.0, service_time_s=0.1)   # 10 Erlangs
+    assert est_p99_s(get_profile("gcp"), d, 5) == math.inf
+
+
+# -- LLM backend behind the router ------------------------------------------
+
+def test_batcher_backend_service_time_and_generation():
+    import jax
+    from repro.configs import registry
+    from repro.models import lm
+    from repro.serving.continuous import ContinuousBatcher
+
+    cfg = registry.get_smoke_config("h2o_danube_3_4b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cb = ContinuousBatcher(cfg, params, max_slots=2, max_len=64)
+    be = BatcherBackend("llm", cb, prompt_len=4, gen_tokens=3)
+    t1 = be.service_time(2)          # one slot wave
+    t2 = be.service_time(3)          # two waves
+    assert t1 > 0
+    assert abs(t2 / t1 - 2.0) < 1e-6
+    outs = be.generate([[5, 17, 99], [7, 7]], max_new=3)
+    assert len(outs) == 2 and all(len(o) == 3 for o in outs)
+
+    gw = Gateway()
+    gw.deploy("llm", be, get_profile("ibm"), autoscaler=warm_config(),
+              max_batch=4)
+    res = gw.run([TrafficSpec("llm", 12)]).per_model["llm"]
+    assert res.n_requests == 12 and res.p99 > 0

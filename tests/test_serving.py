@@ -102,3 +102,42 @@ def test_burst_mode_unchanged_semantics():
     pred = make_predictor()
     a = InferenceService(pred, get_profile("gcp"), "kserve").stress_test(50)
     assert a.n_requests == 50 and len(a.latencies_s) == 50
+
+
+def test_poisson_canary_split_and_accounting():
+    """Canary routing under open-loop arrivals: split fraction holds and
+    every request lands on exactly one version."""
+    v1, v2 = make_predictor("v1"), make_predictor("v2")
+    svc = InferenceService(v1, get_profile("gcp"), "kserve",
+                           canary=v2, canary_fraction=0.3)
+    res = svc.stress_test(300, seed=3, arrival="poisson", rate=500.0)
+    assert sum(res.per_version.values()) == 300
+    assert 0.2 < res.per_version.get("v2", 0) / 300 < 0.4
+    assert all(l > 0 for l in res.latencies_s)
+
+
+def test_canary_zero_fraction_never_routes():
+    v1, v2 = make_predictor("v1"), make_predictor("v2")
+    svc = InferenceService(v1, get_profile("gcp"), "kserve",
+                           canary=v2, canary_fraction=0.0)
+    res = svc.stress_test(64)
+    assert res.per_version == {"v1": 64}
+
+
+def test_canary_split_deterministic_per_seed():
+    v1, v2 = make_predictor("v1"), make_predictor("v2")
+    svc = InferenceService(v1, get_profile("gcp"), "kserve",
+                           canary=v2, canary_fraction=0.25)
+    a = svc.stress_test(200, seed=5).per_version
+    b = svc.stress_test(200, seed=5).per_version
+    assert a == b
+
+
+def test_poisson_latency_floor_is_network_path():
+    pred = make_predictor()
+    prof = get_profile("gcp")
+    svc = InferenceService(pred, prof, "kserve", max_batch=8)
+    res = svc.stress_test(64, arrival="poisson", rate=20.0)
+    floor = prof.network_rtt_s + prof.lb_overhead_s
+    assert min(res.latencies_s) >= floor
+    assert res.total_time_s >= max(res.latencies_s)

@@ -5,13 +5,14 @@ import sys
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
 from repro.models import lm, sharding as msh, steps
+from repro.models.sharding import abstract_mesh
 
-MESH = AbstractMesh((4, 2), ("data", "model"))
-MESH3 = AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+MESH = abstract_mesh((4, 2), ("data", "model"))
+MESH3 = abstract_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def test_param_rules_cover_every_leaf():
@@ -33,13 +34,13 @@ def test_param_rules_cover_every_leaf():
 
 def test_fit_pspec_relocates_to_divisible_dim():
     # 24 heads don't divide 16-way model axis; relocate to d_model dim
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     fitted = msh.fit_pspec((1536, 24, 64), P(None, "model", None), mesh)
     assert tuple(fitted) in ((("model",), None, None), ("model", None, None))
 
 
 def test_fit_pspec_drops_when_nothing_fits():
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     fitted = msh.fit_pspec((7, 5), P("model", None), mesh)
     assert all(e is None for e in tuple(fitted) + (None,))
 
@@ -65,7 +66,7 @@ import jax, functools
 from repro.configs import registry
 from repro.launch import shardings
 from repro.models import sharding as msh, steps
-from repro.launch.roofline import collective_bytes, roofline
+from repro.launch.roofline import collective_bytes, cost_dict, roofline
 
 cfg = registry.get_smoke_config("granite_3_8b").replace(dtype="bfloat16")
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -81,7 +82,7 @@ with msh.use_mesh(mesh):
                       out_shardings=(param_sh, opt_sh, None)).lower(
         param_spec, opt_spec, bspec)
     compiled = lowered.compile()
-cost = compiled.cost_analysis()
+cost = cost_dict(compiled)
 assert cost.get("flops", 0) > 0, cost
 coll = collective_bytes(compiled.as_text())
 assert coll["total_bytes"] > 0, coll   # data-parallel grad all-reduce must exist
