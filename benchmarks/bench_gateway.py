@@ -1,20 +1,26 @@
 """Model-mesh gateway fleet benchmark (beyond paper): >=3 models behind one
 router with heterogeneous traffic (Poisson stream, burst + canary split, and
 a sparse workload forcing a scale-to-zero -> cold-start cycle), plus a
-placement plan across >=2 cloud profiles under both objectives.
+placement plan across >=2 cloud profiles under both objectives, plus an
+SLO/failover scenario: three traffic classes on one fleet through a mid-run
+cloud outage, with the per-class p99 table against a no-priority baseline
+on the same seed.
 
 Compute service times are measured (jitted matmuls of three widths); the
 network / cold-start terms come from the CloudProfiles (DESIGN.md)."""
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.clouds.profiles import get_profile
-from repro.serving.gateway import (AutoscalerConfig, CloudCapacity, Gateway,
-                                   ModelDemand, Predictor, TrafficSpec,
-                                   plan_placement)
+from repro.serving.gateway import (SLO_CLASSES, AutoscalerConfig,
+                                   CloudCapacity, FailureSpec, Gateway,
+                                   ModelDemand, Predictor, SLOClass,
+                                   TrafficSpec, plan_placement)
 from repro.telemetry.events import EventLog
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
@@ -98,17 +104,95 @@ def run() -> list[dict]:
             "derived": f"feasible={s['feasible']};"
                        f"cost_hr={s['total_cost_hr']};{assign}",
         })
-    events = [e["name"] for e in log.events]
     rows.append({
         "name": "gateway_events",
         "us_per_call": out.makespan_s * 1e6,
-        "derived": f"cold_start={events.count('gateway:cold_start')};"
-                   f"scale_up={events.count('gateway:scale_up')};"
-                   f"scale_down={events.count('gateway:scale_down')};"
-                   f"scale_to_zero={events.count('gateway:scale_to_zero')}",
+        "derived": f"cold_start={log.count('gateway:cold_start')};"
+                   f"scale_up={log.count('gateway:scale_up')};"
+                   f"scale_down={log.count('gateway:scale_down')};"
+                   f"scale_to_zero={log.count('gateway:scale_to_zero')}",
     })
     # acceptance: the large model must complete a scale-to-zero -> cold-start
     # cycle (zero pool between its two bursts, a cold start on each)
     assert out.cold_starts["large"] >= 2, out.cold_starts
     assert any(r == 0 for _, r in out.per_model["large"].replica_trace[1:])
+    rows.extend(_slo_failover_scenario(preds["large"]))
+    return rows
+
+
+def _slo_failover_scenario(pred: Predictor) -> list[dict]:
+    """Three SLO classes on one two-replica fleet, a mid-run gcp outage with
+    ibm standby, against a no-priority baseline (uniform class weights, no
+    preemption -- same class NAMES so the per-class tables line up) on the
+    same seed.  Timing is derived from the measured batch service time so
+    the backlog shape is host-independent."""
+    prof = get_profile("gcp")
+    t8 = pred.service_time(8)
+    per_batch = prof.network_rtt_s + prof.lb_overhead_s + t8
+    n_batch = 480
+    drain_s = (n_batch / 8) * per_batch / 2      # backlog of the batch burst
+    window_s = 2.0 * drain_s
+    outage = FailureSpec("gcp", at_s=0.3 * drain_s,
+                         duration_s=max(0.4 * drain_s, 0.25))
+
+    def classes(priority: bool) -> dict:
+        if priority:
+            return {c: SLO_CLASSES[c] for c in ("latency", "standard",
+                                                "batch")}
+        return {c: SLOClass(c, 1.0, SLO_CLASSES[c].deadline_mult)
+                for c in ("latency", "standard", "batch")}
+
+    def run_once(priority: bool):
+        cls = classes(priority)
+        log = EventLog()
+        gw = Gateway(log=log)
+        gw.deploy("fleet", pred, prof, standby=get_profile("ibm"),
+                  autoscaler=AutoscalerConfig(
+                      min_replicas=2, max_replicas=2,
+                      scale_up_delay_s=0.005, idle_window_s=np.inf),
+                  max_batch=8)
+        out = gw.run([
+            TrafficSpec("fleet", n_batch, slo=cls["batch"]),
+            TrafficSpec("fleet", 120, slo=cls["standard"],
+                        arrival="poisson", rate=120 / window_s),
+            TrafficSpec("fleet", 80, slo=cls["latency"],
+                        arrival="poisson", rate=80 / window_s),
+        ], seed=0, failures=[outage])
+        return out, log
+
+    pri, pri_log = run_once(priority=True)
+    base, _ = run_once(priority=False)
+    pc, bc = pri.per_class(), base.per_class()
+
+    print("per-class p99 (priority dispatch vs no-priority baseline, "
+          "same seed + same gcp outage):", file=sys.stderr)
+    print(f"  {'class':<10}{'p99_s':>12}{'baseline':>12}{'miss_rate':>12}",
+          file=sys.stderr)
+    for c in ("latency", "standard", "batch"):
+        print(f"  {c:<10}{pc[c]['p99_s']:>12.5f}{bc[c]['p99_s']:>12.5f}"
+              f"{pc[c]['miss_rate']:>12.4f}", file=sys.stderr)
+
+    # acceptance: priority dispatch must strictly beat the baseline for the
+    # latency class, and the outage must actually have moved the fleet
+    assert pc["latency"]["p99_s"] < bc["latency"]["p99_s"], (pc, bc)
+    assert pri_log.count("gateway:failover") >= 1
+    assert pri_log.count("gateway:recover") >= 1
+
+    rows = [{"name": f"gateway_slo_{c}",
+             "us_per_call": pc[c]["p99_s"] * 1e6,
+             "derived": f"p50_s={pc[c]['p50_s']:.5f};"
+                        f"p99_s={pc[c]['p99_s']:.5f};"
+                        f"baseline_p99_s={bc[c]['p99_s']:.5f};"
+                        f"miss_rate={pc[c]['miss_rate']}"}
+            for c in ("latency", "standard", "batch")]
+    rows.append({
+        "name": "gateway_slo_failover",
+        "us_per_call": pri.makespan_s * 1e6,
+        "derived": f"outage_at_s={outage.at_s:.4f};"
+                   f"outage_s={outage.duration_s:.4f};"
+                   f"failover={pri_log.count('gateway:failover')};"
+                   f"recover={pri_log.count('gateway:recover')};"
+                   f"preempt={pri_log.count('gateway:preempt')};"
+                   f"cold_start={pri_log.count('gateway:cold_start')}",
+    })
     return rows

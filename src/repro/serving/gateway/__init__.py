@@ -1,16 +1,19 @@
-"""Model-mesh serving gateway: multi-model routing (router.py),
-scale-to-zero autoscaling (autoscaler.py), multi-cloud placement
+"""Model-mesh serving gateway: multi-model routing with SLO classes,
+preemption and cloud failover (router.py), scale-to-zero autoscaling
+(autoscaler.py), multi-cloud placement + observed-load re-planning
 (placement.py).  See DESIGN.md §Gateway."""
 from .autoscaler import Autoscaler, AutoscalerConfig
 from .placement import (Assignment, CloudCapacity, ModelDemand, PlacementPlan,
-                        est_p99_s, plan_placement, replicas_needed)
-from .router import (BatcherBackend, Deployment, Gateway, GatewayResult,
-                     Predictor, ServeResult, TrafficSpec)
+                        est_p99_s, plan_placement, replan, replicas_needed)
+from .router import (SLO_CLASSES, BatcherBackend, Deployment, FailureSpec,
+                     Gateway, GatewayResult, Predictor, ServeResult, SLOClass,
+                     TrafficSpec, resolve_slo)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig",
     "Assignment", "CloudCapacity", "ModelDemand", "PlacementPlan",
-    "est_p99_s", "plan_placement", "replicas_needed",
-    "BatcherBackend", "Deployment", "Gateway", "GatewayResult",
-    "Predictor", "ServeResult", "TrafficSpec",
+    "est_p99_s", "plan_placement", "replan", "replicas_needed",
+    "BatcherBackend", "Deployment", "FailureSpec", "Gateway", "GatewayResult",
+    "Predictor", "ServeResult", "SLOClass", "SLO_CLASSES", "TrafficSpec",
+    "resolve_slo",
 ]

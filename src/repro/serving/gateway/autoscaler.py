@@ -45,6 +45,16 @@ class Autoscaler:
     def can_remove(self, pool: int) -> bool:
         return pool > self.cfg.min_replicas
 
+    def relaunch_pool(self, pool_before: int, queue_len: int) -> int:
+        """Replicas to start on the new cloud after a failover/fail-back:
+        preserve the working-set size (the old pool was sized by observed
+        load), keep at least min_replicas, and start one even from an empty
+        pool when work is already queued.  Bounded by max_replicas so a
+        migration cannot out-scale the policy."""
+        want = max(pool_before, self.cfg.min_replicas,
+                   1 if queue_len > 0 else 0)
+        return min(want, max(self.cfg.max_replicas, self.cfg.min_replicas))
+
     @property
     def tracks_idle(self) -> bool:
         return math.isfinite(self.cfg.idle_window_s)

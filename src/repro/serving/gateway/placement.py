@@ -46,7 +46,13 @@ def est_p99_s(profile: CloudProfile, demand: ModelDemand,
               replicas: int) -> float:
     """rtt + lb + service + 3x an M/M/1-style waiting term at per-replica
     utilization rho -- a tail estimate, deliberately coarse (the gateway
-    simulation is the ground truth; this only has to rank clouds)."""
+    simulation is the ground truth; this only has to rank clouds).
+
+    Saturated assignments (rho >= 1, or no replicas at all) have no finite
+    tail: the queue grows without bound, so the estimate is inf, never a
+    misleading finite number."""
+    if replicas <= 0:
+        return math.inf
     rho = demand.load / replicas
     if rho >= 1.0:
         return math.inf
@@ -63,12 +69,19 @@ class Assignment:
     est_p99_s: float
     cost_hr: float
 
+    @property
+    def saturated(self) -> bool:
+        """True when the assignment offers no finite latency bound
+        (unplaced, zero replicas, or utilization >= 1)."""
+        return not math.isfinite(self.est_p99_s)
+
 
 @dataclasses.dataclass
 class PlacementPlan:
     objective: str
     assignments: list
     feasible: bool
+    clouds: list = dataclasses.field(default_factory=list)  # CloudCapacity
 
     @property
     def total_cost_hr(self) -> float:
@@ -76,6 +89,11 @@ class PlacementPlan:
 
     @property
     def worst_p99_s(self) -> float:
+        """Worst estimated tail over the whole plan.  A saturated or
+        unplaced assignment makes this inf: an infeasible plan must not
+        report the finite tail of whatever happened to fit."""
+        if any(a.saturated for a in self.assignments):
+            return math.inf
         return max((a.est_p99_s for a in self.assignments if a.cloud),
                    default=0.0)
 
@@ -95,6 +113,7 @@ class PlacementPlan:
                 "assignments": {a.model: {
                     "cloud": a.cloud, "replicas": a.replicas,
                     "est_p99_s": fin(a.est_p99_s),
+                    "saturated": a.saturated,
                     "cost_hr": round(a.cost_hr, 4)}
                     for a in self.assignments}}
 
@@ -126,4 +145,45 @@ def plan_placement(models: list, clouds: list,
         _, c, p99, cost = best
         remaining[c.profile.name] -= need
         assignments.append(Assignment(d.name, c.profile.name, need, p99, cost))
-    return PlacementPlan(objective, assignments, feasible)
+    return PlacementPlan(objective, assignments, feasible, clouds=list(clouds))
+
+
+def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
+           objective: Optional[str] = None) -> PlacementPlan:
+    """Re-plan from OBSERVED load (closing the estimate -> measure ->
+    re-plan loop, MLModelCI analog): each model's demand is rebuilt from
+    the arrival rate and realized per-request service time the gateway
+    measured (ServeResult.observed / gateway:observed events), then placed
+    again under the same clouds and objective.
+
+    ``result`` is a GatewayResult from Gateway.run; ``clouds`` defaults to
+    the CloudCapacity list the original plan was built against.  Models in
+    the original plan that saw no traffic this window (Gateway.run omits
+    them from per_model) keep their prior assignment: their replicas stay
+    reserved, so the revised capacity_map still covers the whole fleet."""
+    clouds = list(clouds) if clouds is not None else list(plan.clouds)
+    if not clouds:
+        raise ValueError("replan needs the CloudCapacity list: the original "
+                         "plan carries none (pass clouds=...)")
+    demands = []
+    for name in sorted(result.per_model):
+        obs = result.per_model[name].observed
+        if not obs:
+            raise ValueError(f"no observed load for {name!r}: run the "
+                             "traffic through Gateway.run first")
+        demands.append(ModelDemand(name, obs["rate_rps"],
+                                   obs["service_time_s"]))
+    kept = [a for a in plan.assignments if a.model not in result.per_model]
+    reserve: dict = {}
+    for a in kept:
+        if a.cloud:
+            reserve[a.cloud] = reserve.get(a.cloud, 0) + a.replicas
+    shrunk = [dataclasses.replace(
+        c, max_replicas=c.max_replicas - reserve.get(c.profile.name, 0))
+        for c in clouds]
+    new = plan_placement(demands, shrunk, objective=objective
+                         or plan.objective)
+    new.assignments.extend(kept)
+    new.feasible = new.feasible and all(a.cloud for a in kept)
+    new.clouds = clouds                  # report the REAL budgets, not the
+    return new                           # reservation-shrunk ones

@@ -16,9 +16,20 @@ InferenceService (serving/kserve.py) is now a single-model client of this
 router, so the paper's Table-3 stress test and the fleet simulation share
 one event loop.
 
+SLO layer (DESIGN.md S3): every request carries an SLOClass
+(latency / standard / batch).  Dispatch serves the queue maximizing
+``weight * age-of-oldest`` instead of longest-queue; a ``latency`` batch
+may preempt an in-flight ``batch`` batch (the victim re-queues,
+gateway:preempt).  A FailureSpec marks a cloud down mid-run: affected
+pools drain (in-flight work re-queues), deployments fail over to their
+standby CloudProfile paying control-plane + model_load_s cold starts
+(gateway:failover), and migrate back the same way when the window ends
+(gateway:recover).
+
 Event kinds: "arr" request arrival, "up" replica joins the pool after the
 control-plane delay, "free" replica finishes a batch, "idle" idle-window
-expiry check (scale-down / scale-to-zero, autoscaler.py).
+expiry check (scale-down / scale-to-zero, autoscaler.py), "fail"/"recover"
+FailureSpec window edges.
 """
 from __future__ import annotations
 
@@ -36,7 +47,67 @@ from ...telemetry.events import EventLog
 from .autoscaler import Autoscaler, AutoscalerConfig
 
 
+# -- SLO classes -------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A traffic priority class.
+
+    weight scales queue age in dispatch scoring (higher = served sooner);
+    deadline_mult sets the per-request deadline as a multiple of the
+    deployment's warm single-request path (rtt + lb + service_time(1)), so
+    the same class means the same *relative* promise on any backend.
+    ``preempts`` classes may evict an in-flight ``preemptible`` batch when
+    no replica is idle.
+    """
+    name: str
+    weight: float
+    deadline_mult: float
+    preempts: bool = False
+    preemptible: bool = False
+
+
+SLO_CLASSES = {
+    "latency": SLOClass("latency", weight=8.0, deadline_mult=4.0,
+                        preempts=True),
+    "standard": SLOClass("standard", weight=1.0, deadline_mult=20.0),
+    "batch": SLOClass("batch", weight=0.25, deadline_mult=math.inf,
+                      preemptible=True),
+}
+
+
+def resolve_slo(slo) -> SLOClass:
+    if isinstance(slo, SLOClass):
+        return slo
+    try:
+        return SLO_CLASSES[slo]
+    except KeyError:
+        raise ValueError(f"unknown SLO class {slo!r}; "
+                         f"known: {sorted(SLO_CLASSES)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """A simulated cloud outage: ``cloud`` is down over
+    [at_s, at_s + duration_s).  Injected via Gateway.run(failures=[...])."""
+    cloud: str
+    at_s: float
+    duration_s: float
+
+    def __post_init__(self):
+        if self.at_s < 0 or self.duration_s <= 0:
+            raise ValueError("FailureSpec needs at_s >= 0 and duration_s > 0")
+
+
 # -- results / backends (moved from kserve.py; it re-exports them) ----------
+
+def _class_stats(lats: list, misses: int) -> dict:
+    n = len(lats)
+    return {"n": n,
+            "p50_s": round(float(np.percentile(lats, 50)), 6),
+            "p99_s": round(float(np.percentile(lats, 99)), 6),
+            "miss_rate": round(misses / n, 4)}
+
 
 @dataclasses.dataclass
 class ServeResult:
@@ -46,6 +117,9 @@ class ServeResult:
     latencies_s: list
     replica_trace: list = dataclasses.field(default_factory=list)
     per_version: dict = dataclasses.field(default_factory=dict)
+    class_latencies: dict = dataclasses.field(default_factory=dict)
+    class_misses: dict = dataclasses.field(default_factory=dict)
+    observed: dict = dataclasses.field(default_factory=dict)
 
     @property
     def p50(self):
@@ -55,12 +129,19 @@ class ServeResult:
     def p99(self):
         return float(np.percentile(self.latencies_s, 99))
 
+    def per_class(self) -> dict:
+        """Per-SLO-class p50/p99 and deadline-miss rate."""
+        return {c: _class_stats(lats, self.class_misses.get(c, 0))
+                for c, lats in sorted(self.class_latencies.items())}
+
     def summary(self) -> dict:
         return {"strategy": self.strategy, "n": self.n_requests,
                 "total_s": round(self.total_time_s, 4),
                 "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
                 "replicas_max": max([r for _, r in self.replica_trace], default=1),
-                **({"per_version": self.per_version} if self.per_version else {})}
+                **({"per_version": self.per_version} if self.per_version else {}),
+                **({"per_class": self.per_class()}
+                   if self.class_latencies else {})}
 
 
 class Predictor:
@@ -165,13 +246,15 @@ def _pow2(b: int) -> int:
 class TrafficSpec:
     """One arrival stream for one model.  Several specs may target the same
     model (e.g. two bursts separated by more than the idle window to force
-    a scale-to-zero -> cold-start cycle)."""
+    a scale-to-zero -> cold-start cycle).  ``slo`` is an SLO_CLASSES key or
+    a custom SLOClass instance applied to every request of this stream."""
     model: str
     n: int
     arrival: str = "burst"               # "burst" | "poisson"
     rate: float = 0.0                    # poisson req/s
     start_s: float = 0.0
     arrivals: Optional[Any] = None       # explicit times override generation
+    slo: Any = "standard"                # str key or SLOClass
 
     def gen(self, rng) -> np.ndarray:
         if self.arrivals is not None:
@@ -193,6 +276,7 @@ class Deployment:
     max_batch: int = 32
     canary: Any = None
     canary_fraction: float = 0.0
+    standby: Optional[CloudProfile] = None   # failover target cloud
 
     @property
     def backends(self) -> list:
@@ -206,22 +290,38 @@ class _Replica:
     warm: bool                           # cold replicas pay model_load_s once
     busy: bool = False
     last_active: float = 0.0
+    epoch: int = 0                       # bumps per assignment/preemption;
+    inflight: Optional[dict] = None      # stale "free" events check it
 
 
 class _ModelState:
-    def __init__(self, dep: Deployment, arr: np.ndarray, ver: np.ndarray):
+    def __init__(self, dep: Deployment, arr: np.ndarray, ver: np.ndarray,
+                 cls: list):
         self.dep = dep
         self.arr = arr
         self.ver = ver
+        self.cls = cls                   # SLOClass per request index
         self.lat = np.full(len(arr), -1.0)
-        self.pending: dict[int, list] = {v: [] for v in range(len(dep.backends))}
+        # dispatch queues keyed (version, slo name); requests stay in
+        # arrival order within a queue
+        self.pending: dict[tuple, list] = {}
+        self.slo_by_name: dict[str, SLOClass] = {}
+        for c in cls:
+            prev = self.slo_by_name.setdefault(c.name, c)
+            if prev != c:                # queues are keyed by name: two
+                raise ValueError(        # defs would silently share one
+                    f"conflicting SLOClass definitions named {c.name!r} "
+                    f"on {dep.name!r}: {prev} vs {c}")
         self.replicas: dict[int, _Replica] = {}
         self.scheduled_up = 0
         self.next_rid = 0
+        self.generation = 0              # bumps on failover; stale "up"
+        self.active = dep.profile        # current cloud (failover switches)
         self.trace: list = []
         self.cold_starts = 0
         self.per_version: dict[str, int] = {}
         self.served = 0
+        self.busy_s = 0.0                # realized backend service seconds
 
     @property
     def pool(self) -> int:
@@ -237,10 +337,25 @@ class GatewayResult:
     cold_starts: dict                    # name -> int
     makespan_s: float
 
+    def per_class(self) -> dict:
+        """Fleet-wide per-SLO-class stats (latencies pooled across models)."""
+        lats: dict[str, list] = {}
+        miss: dict[str, int] = {}
+        for r in self.per_model.values():
+            for c, ls in r.class_latencies.items():
+                lats.setdefault(c, []).extend(ls)
+                miss[c] = miss.get(c, 0) + r.class_misses.get(c, 0)
+        return {c: _class_stats(ls, miss.get(c, 0))
+                for c, ls in sorted(lats.items())}
+
     def summary(self) -> dict:
-        return {"makespan_s": round(self.makespan_s, 4),
-                "cold_starts": dict(self.cold_starts),
-                "models": {m: r.summary() for m, r in self.per_model.items()}}
+        out = {"makespan_s": round(self.makespan_s, 4),
+               "cold_starts": dict(self.cold_starts),
+               "models": {m: r.summary() for m, r in self.per_model.items()}}
+        pc = self.per_class()
+        if pc:
+            out["per_class"] = pc
+        return out
 
 
 # -- the router --------------------------------------------------------------
@@ -257,26 +372,39 @@ class Gateway:
     starve forever proceeds over budget with a gateway:capacity_exceeded
     event (the K8s analog: the pod pends, then preempts -- we choose
     serve-and-log so the simulation always completes).
+
+    record_batches=True keeps a per-batch audit trail (batch_log) and a
+    per-cloud usage trace (usage_trace) for the invariant test suite.
     """
 
     def __init__(self, *, capacity: Optional[dict] = None,
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None,
+                 record_batches: bool = False):
         self.deployments: dict[str, Deployment] = {}
         self.capacity = dict(capacity or {})
         self.log = log or EventLog()
+        self.record_batches = record_batches
+        self.batch_log: list = []        # dicts, one per dispatched batch
+        self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
 
     def deploy(self, name: str, backend, profile: CloudProfile, *,
                autoscaler=None, max_batch: int = 32,
-               canary=None, canary_fraction: float = 0.0) -> Deployment:
+               canary=None, canary_fraction: float = 0.0,
+               standby: Optional[CloudProfile] = None) -> Deployment:
         if isinstance(autoscaler, AutoscalerConfig):
             autoscaler = Autoscaler(autoscaler)
+        if standby is not None and standby.name == profile.name:
+            raise ValueError("standby must be a different cloud")
         dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
-                         max_batch, canary, canary_fraction)
+                         max_batch, canary, canary_fraction, standby)
         self.deployments[name] = dep
         return dep
 
     # -- discrete-event loop ------------------------------------------------
-    def run(self, traffic: list, seed: int = 0) -> GatewayResult:
+    def run(self, traffic: list, seed: int = 0,
+            failures: Optional[list] = None) -> GatewayResult:
+        self.batch_log = []              # audit trails cover ONE run
+        self.usage_trace = []
         rng = np.random.default_rng(seed)
         by_model: dict[str, list] = {}
         for spec in traffic:
@@ -296,21 +424,34 @@ class Gateway:
 
         events: list = []                # (t, seq, kind, model, payload)
         seq = itertools.count()
+        down: dict[str, int] = {}        # cloud -> active failure windows
         st: dict[str, _ModelState] = {}
         for m, dep in self.deployments.items():
             specs = by_model.get(m, [])
-            arr = (np.sort(np.concatenate([s.gen(rng) for s in specs]))
-                   if specs else np.zeros(0))
+            times, classes = [], []
+            for spec in specs:
+                ts = spec.gen(rng)
+                times.append(ts)
+                classes.extend([resolve_slo(spec.slo)] * len(ts))
+            arr = np.concatenate(times) if times else np.zeros(0)
+            order = np.argsort(arr, kind="stable")
+            arr = arr[order]
+            cls = [classes[i] for i in order]
             ver = np.zeros(len(arr), int)
             if dep.canary is not None and dep.canary_fraction > 0:
                 ver = (rng.random(len(arr)) < dep.canary_fraction).astype(int)
-            s = st[m] = _ModelState(dep, arr, ver)
+            s = st[m] = _ModelState(dep, arr, ver, cls)
             for _ in range(dep.autoscaler.cfg.min_replicas):
                 s.replicas[s.next_rid] = _Replica(s.next_rid, warm=True)
                 s.next_rid += 1
             s.trace.append((0.0, len(s.replicas)))
             for i, t in enumerate(arr):
                 heapq.heappush(events, (float(t), next(seq), "arr", m, i))
+        for f in failures or []:
+            heapq.heappush(events, (float(f.at_s), next(seq),
+                                    "fail", "", f.cloud))
+            heapq.heappush(events, (float(f.at_s + f.duration_s), next(seq),
+                                    "recover", "", f.cloud))
 
         with self.log.stage("gateway:run", models=sorted(by_model),
                             n=int(sum(len(x.arr) for x in st.values()))):
@@ -323,13 +464,52 @@ class Gateway:
                 # replica instead of forcing a retire + cold start
                 while events and events[0][0] == t:
                     _, _, kind, m, data = heapq.heappop(events)
+                    if kind == "fail":
+                        down[data] = down.get(data, 0) + 1
+                        if down[data] == 1:
+                            for name, x in st.items():
+                                if x.active.name == data:
+                                    self._migrate(x, t, events, seq, st, down,
+                                                  reason="fail")
+                                    touched.add(name)
+                        continue
+                    if kind == "recover":
+                        down[data] -= 1
+                        if down[data] == 0:
+                            del down[data]
+                            for name, x in st.items():
+                                if (x.dep.profile.name == data
+                                        and x.active.name != data):
+                                    self._migrate(x, t, events, seq, st, down,
+                                                  reason="recover")
+                                    touched.add(name)
+                                elif x.active.name == data:
+                                    # pool drained in place (no standby):
+                                    # relaunch COLD -- the outage destroyed
+                                    # the pods, whatever cold_scale_up says
+                                    self._migrate(x, t, events, seq, st, down,
+                                                  reason="recover")
+                                    touched.add(name)
+                                elif (x.active.name in down and x.dep.standby
+                                      and x.dep.standby.name == data):
+                                    # primary still down, standby back up:
+                                    # delayed failover
+                                    self._migrate(x, t, events, seq, st, down,
+                                                  reason="fail")
+                                    touched.add(name)
+                        continue
                     s = st[m]
                     if kind == "arr":
-                        s.pending[int(s.ver[data])].append(data)
+                        key = (int(s.ver[data]), s.cls[data].name)
+                        s.pending.setdefault(key, []).append(data)
                         touched.add(m)
                     elif kind == "up":
+                        gen, forced_cold = data
+                        if gen != s.generation:
+                            continue     # scheduled before a failover drain
                         s.scheduled_up -= 1
-                        warm = not s.dep.autoscaler.cfg.cold_scale_up
+                        warm = (not s.dep.autoscaler.cfg.cold_scale_up
+                                and not forced_cold)
                         s.replicas[s.next_rid] = _Replica(
                             s.next_rid, warm=warm, last_active=t)
                         if s.dep.autoscaler.tracks_idle:
@@ -341,22 +521,24 @@ class Gateway:
                         s.next_rid += 1
                         touched.add(m)
                     elif kind == "free":
-                        r = s.replicas.get(data)
-                        if r is not None:
+                        rid, epoch = data
+                        r = s.replicas.get(rid)
+                        if r is not None and r.epoch == epoch:
                             r.busy = False
+                            r.inflight = None
                             r.last_active = t
                             if s.dep.autoscaler.tracks_idle:
                                 heapq.heappush(events, (
                                     t + s.dep.autoscaler.cfg.idle_window_s,
-                                    next(seq), "idle", m, (data, t)))
+                                    next(seq), "idle", m, (rid, t)))
                             touched.add(m)
                     else:                # "idle"
                         idle_checks.append((m, data))
                 for m in touched:
                     self._dispatch(st[m], t, events, seq)
-                    self._autoscale(st[m], t, events, seq, st)
+                    self._autoscale(st[m], t, events, seq, st, down)
                 for m, payload in idle_checks:
-                    self._maybe_retire(st[m], t, payload)
+                    self._maybe_retire(st[m], t, payload, st)
 
         results, cold, makespan = {}, {}, 0.0
         for m, s in st.items():
@@ -368,66 +550,216 @@ class Gateway:
             total = max((float(s.arr[i] + s.lat[i]) for i in range(len(s.arr))),
                         default=0.0)
             makespan = max(makespan, total)
-            results[m] = ServeResult(f"gateway:{m}", len(s.arr), total,
-                                     s.lat.tolist(), s.trace,
-                                     per_version=s.per_version)
+            results[m] = self._result(s, total)
             cold[m] = s.cold_starts
         return GatewayResult(results, cold, makespan)
 
-    def _dispatch(self, s: _ModelState, t: float, events, seq) -> None:
+    def _result(self, s: _ModelState, total: float) -> ServeResult:
         dep = s.dep
-        while True:
-            idle = [r for r in s.replicas.values() if not r.busy]
-            if not idle:
-                return
-            v = max(s.pending, key=lambda k: len(s.pending[k]))
-            take = s.pending[v][:dep.max_batch]
-            if not take:
-                return
-            s.pending[v] = s.pending[v][len(take):]
-            r = min(idle, key=lambda x: x.rid)
-            cold = 0.0
-            if not r.warm:
-                cold = dep.profile.model_load_s
-                r.warm = True
-                s.cold_starts += 1
-                self.log.record("gateway:cold_start", cold, model=dep.name,
-                                t_sim=round(t, 6))
-            backend = dep.backends[v]
-            b = len(take)
-            done = (t + dep.profile.network_rtt_s + dep.profile.lb_overhead_s
-                    + cold + backend.service_time(b))
-            for i in take:
-                s.lat[i] = done - s.arr[i]
-            s.served += b
-            s.per_version[backend.name] = s.per_version.get(backend.name, 0) + b
-            r.busy = True
-            r.last_active = done
-            heapq.heappush(events, (done, next(seq), "free", dep.name, r.rid))
+        # deadline base: the warm single-request path on the PRIMARY cloud
+        # (failover cold starts count against the same promise)
+        base = (dep.profile.network_rtt_s + dep.profile.lb_overhead_s
+                + dep.backend.service_time(1))
+        cls_lats: dict[str, list] = {}
+        cls_miss: dict[str, int] = {}
+        for i in range(len(s.arr)):
+            c = s.cls[i]
+            cls_lats.setdefault(c.name, []).append(float(s.lat[i]))
+            if s.lat[i] > c.deadline_mult * base:
+                cls_miss[c.name] = cls_miss.get(c.name, 0) + 1
+        n = len(s.arr)
+        window = float(s.arr.max() - s.arr.min()) if n > 1 else 0.0
+        if window <= 1e-9:               # pure burst: fall back to the span
+            window = max(total - float(s.arr.min()), 1e-9)
+        observed = {"rate_rps": n / window,
+                    "service_time_s": s.busy_s / n,
+                    "window_s": window, "n": n}
+        self.log.record("gateway:observed", 0.0, model=dep.name,
+                        rate_rps=round(observed["rate_rps"], 4),
+                        service_time_s=round(observed["service_time_s"], 8),
+                        n=n)
+        return ServeResult(f"gateway:{dep.name}", n, total, s.lat.tolist(),
+                           s.trace, per_version=s.per_version,
+                           class_latencies=cls_lats, class_misses=cls_miss,
+                           observed=observed)
 
-    def _autoscale(self, s: _ModelState, t: float, events, seq, st) -> None:
+    # -- dispatch -----------------------------------------------------------
+    def _best_queue(self, s: _ModelState, keys: list, t: float) -> tuple:
+        """Class-weighted age: serve the queue maximizing weight * age of
+        its oldest request; ties fall to weight then earliest arrival."""
+        def rank(k):
+            q = s.pending[k]
+            w = s.slo_by_name[k[1]].weight
+            return (w * (t - float(s.arr[q[0]])), w, -q[0])
+        return max(keys, key=rank)
+
+    def _dispatch(self, s: _ModelState, t: float, events, seq) -> None:
+        while True:
+            keys = [k for k, q in s.pending.items() if q]
+            if not keys:
+                return
+            idle = [r for r in s.replicas.values() if not r.busy]
+            if idle:
+                key = self._best_queue(s, keys, t)
+                r = min(idle, key=lambda x: x.rid)
+            else:
+                pkeys = [k for k in keys if s.slo_by_name[k[1]].preempts]
+                if not pkeys:
+                    return
+                key = self._best_queue(s, pkeys, t)
+                w = s.slo_by_name[key[1]].weight
+                # strict weight order prevents preemption livelock (a class
+                # can never evict work of its own or a higher class)
+                victims = [r for r in s.replicas.values()
+                           if r.busy and r.inflight is not None
+                           and r.inflight["slo"].preemptible
+                           and r.inflight["slo"].weight < w]
+                if not victims:
+                    return
+                # evict the batch with the most remaining work (least sunk)
+                r = max(victims, key=lambda x: (x.inflight["done"], x.rid))
+                n_back = self._reclaim(s, r, t)
+                self.log.record("gateway:preempt", 0.0, model=s.dep.name,
+                                t_sim=round(t, 6), rid=r.rid, requeued=n_back,
+                                by=key[1])
+            self._assign(s, r, key, t, events, seq)
+
+    def _assign(self, s: _ModelState, r: _Replica, key: tuple, t: float,
+                events, seq) -> None:
+        dep = s.dep
+        v, cname = key
+        take = s.pending[key][:dep.max_batch]
+        s.pending[key] = s.pending[key][len(take):]
+        cold = 0.0
+        if not r.warm:
+            cold = s.active.model_load_s
+            r.warm = True
+            s.cold_starts += 1
+            self.log.record("gateway:cold_start", cold, model=dep.name,
+                            cloud=s.active.name, t_sim=round(t, 6))
+        backend = dep.backends[v]
+        b = len(take)
+        svc = backend.service_time(b)
+        done = (t + s.active.network_rtt_s + s.active.lb_overhead_s
+                + cold + svc)
+        for i in take:
+            s.lat[i] = done - s.arr[i]
+        s.served += b
+        s.busy_s += svc
+        s.per_version[backend.name] = s.per_version.get(backend.name, 0) + b
+        r.busy = True
+        r.last_active = done
+        r.epoch += 1
+        rec = None
+        if self.record_batches:
+            rec = {"model": dep.name, "rid": r.rid, "cloud": s.active.name,
+                   "cls": cname, "version": v, "idx": tuple(take),
+                   "start_s": t, "end_s": done, "preempted": False}
+            self.batch_log.append(rec)
+        r.inflight = {"idx": take, "v": v, "cls": cname,
+                      "slo": s.slo_by_name[cname], "backend": backend.name,
+                      "service_s": svc, "done": done, "record": rec}
+        heapq.heappush(events, (done, next(seq), "free", dep.name,
+                                (r.rid, r.epoch)))
+
+    def _reclaim(self, s: _ModelState, r: _Replica, t: float) -> int:
+        """Undo an in-flight batch (preemption or cloud failure): requests
+        re-queue with their original arrival times, so they complete exactly
+        once when re-dispatched.  Request index order IS arrival order
+        (arrivals are sorted at init), so a sorted merge restores the
+        queue's FIFO invariant even when several replicas reclaim into the
+        same queue (e.g. a whole-pool failover drain)."""
+        fl = r.inflight
+        take = fl["idx"]
+        key = (fl["v"], fl["cls"])
+        s.pending[key] = sorted(take + s.pending.get(key, []))
+        for i in take:
+            s.lat[i] = -1.0
+        s.served -= len(take)
+        s.busy_s -= fl["service_s"]
+        s.per_version[fl["backend"]] -= len(take)
+        if fl["record"] is not None:
+            fl["record"]["end_s"] = t
+            fl["record"]["preempted"] = True
+        r.busy = False
+        r.inflight = None
+        r.epoch += 1                     # invalidate the scheduled "free"
+        r.last_active = t
+        return len(take)
+
+    # -- failover -----------------------------------------------------------
+    def _migrate(self, s: _ModelState, t: float, events, seq, st, down, *,
+                 reason: str) -> None:
+        """Drain a pool off its current cloud and restart it on the target
+        (standby on failure, primary on recovery).  In-flight work re-queues
+        -- pod identity is not portable across clouds -- and every restarted
+        replica is cold: it pays the control-plane delay plus the target
+        profile's model_load_s on its first batch."""
+        dep = s.dep
+        pool_before = s.pool
+        requeued = 0
+        for r in list(s.replicas.values()):
+            if r.busy and r.inflight is not None:
+                requeued += self._reclaim(s, r, t)
+        s.replicas.clear()
+        s.generation += 1                # stale "up" events are dropped
+        s.scheduled_up = 0
+        s.trace.append((t, 0))
+        if self.record_batches:
+            self.usage_trace.append((t, s.active.name,
+                                     self._cloud_usage(st, s.active.name)))
+        src = s.active.name
+        if reason == "recover":
+            target = dep.profile
+        else:
+            target = (dep.standby if s.active.name == dep.profile.name
+                      else dep.profile)
+        if target is not None and target.name in down:
+            target = None                # nowhere to go: drain and wait
+        event = "gateway:failover" if reason == "fail" else "gateway:recover"
+        self.log.record(event, 0.0, model=dep.name, src=src,
+                        dst=target.name if target else None,
+                        t_sim=round(t, 6), requeued=requeued)
+        if target is None:
+            return
+        s.active = target
+        n = dep.autoscaler.relaunch_pool(pool_before, s.queue_len())
+        for i in range(n):
+            self._launch(s, t, events, seq, st, down,
+                         from_zero=(i == 0 and s.queue_len() > 0),
+                         forced_cold=True)
+
+    # -- scaling ------------------------------------------------------------
+    def _autoscale(self, s: _ModelState, t: float, events, seq, st,
+                   down) -> None:
         q = s.queue_len()
         if q > 0 and s.pool == 0:        # scale from zero: spin up one
-            self._launch(s, t, events, seq, st, from_zero=True)
+            self._launch(s, t, events, seq, st, down, from_zero=True)
             return
         # at most ONE launch per evaluation (KPA rate-limits scale-up; also
         # the pre-gateway sim's cadence of one replica per batch completion,
         # which the legacy InferenceService path depends on)
         if s.dep.autoscaler.scale_up_needed(q, s.pool):
-            self._launch(s, t, events, seq, st)
+            self._launch(s, t, events, seq, st, down)
 
     def _cloud_usage(self, st, cloud: str) -> int:
         return sum(x.pool for x in st.values()
-                   if x.dep.profile.name == cloud)
+                   if x.active.name == cloud)
 
-    def _launch(self, s: _ModelState, t: float, events, seq, st, *,
-                from_zero: bool = False) -> bool:
-        cloud = s.dep.profile.name
+    def _launch(self, s: _ModelState, t: float, events, seq, st, down, *,
+                from_zero: bool = False, forced_cold: bool = False) -> bool:
+        cloud = s.active.name
+        if cloud in down:                # nothing schedules on a dead cloud
+            self.log.record("gateway:scale_denied", 0.0, model=s.dep.name,
+                            cloud=cloud, t_sim=round(t, 6),
+                            reason="cloud_down")
+            return False
         cap = self.capacity.get(cloud)
         if cap is not None and self._cloud_usage(st, cloud) >= cap:
             if not from_zero:
                 self.log.record("gateway:scale_denied", 0.0, model=s.dep.name,
-                                cloud=cloud, t_sim=round(t, 6))
+                                cloud=cloud, t_sim=round(t, 6),
+                                reason="capacity")
                 return False
             # a deployment at pool 0 would starve forever if every other
             # pool on this cloud is warm-pinned: serve over budget, loudly
@@ -436,12 +768,15 @@ class Gateway:
         delay = s.dep.autoscaler.cfg.scale_up_delay_s
         s.scheduled_up += 1
         s.trace.append((t, s.pool))
-        heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name, None))
+        if self.record_batches:
+            self.usage_trace.append((t, cloud, self._cloud_usage(st, cloud)))
+        heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name,
+                                (s.generation, forced_cold)))
         self.log.record("gateway:scale_up", delay, model=s.dep.name,
                         t_sim=round(t, 6), pool=s.pool, from_zero=from_zero)
         return True
 
-    def _maybe_retire(self, s: _ModelState, t: float, payload) -> None:
+    def _maybe_retire(self, s: _ModelState, t: float, payload, st) -> None:
         rid, stamp = payload
         r = s.replicas.get(rid)
         if r is None or r.busy or r.last_active > stamp:
@@ -450,6 +785,9 @@ class Gateway:
             return
         del s.replicas[rid]
         s.trace.append((t, s.pool))
+        if self.record_batches:
+            self.usage_trace.append((t, s.active.name,
+                                     self._cloud_usage(st, s.active.name)))
         self.log.record("gateway:scale_down", 0.0, model=s.dep.name,
                         t_sim=round(t, 6), pool=s.pool)
         if s.pool == 0:

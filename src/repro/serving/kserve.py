@@ -55,10 +55,14 @@ class InferenceService:
 
     # -- the paper's stress test -------------------------------------------
     def stress_test(self, n_requests: int, seed: int = 0, *,
-                    arrival: str = "burst", rate: float = 0.0) -> ServeResult:
+                    arrival: str = "burst", rate: float = 0.0,
+                    slo="standard") -> ServeResult:
         """arrival="burst": all requests at t=0 (the paper's test).
         arrival="poisson": open-loop Poisson arrivals at `rate` req/s
-        (beyond-paper: measures queueing latency, not just throughput)."""
+        (beyond-paper: measures queueing latency, not just throughput).
+        slo: SLO class (name or SLOClass) stamped on every request --
+        passed straight through to the gateway, so per-class percentiles
+        and deadline-miss rates come back in the result."""
         with self.log.stage(f"serve:{self.strategy}", n=n_requests):
             if self.strategy == "baremetal":
                 return self._sequential(n_requests, reload_each=True)
@@ -69,7 +73,8 @@ class InferenceService:
                 rng = np.random.default_rng(seed + 1)
                 gaps = rng.exponential(1.0 / max(rate, 1e-9), n_requests)
                 arrivals = np.cumsum(gaps)
-            return self._kserve_sim(n_requests, seed=seed, arrivals=arrivals)
+            return self._kserve_sim(n_requests, seed=seed, arrivals=arrivals,
+                                    slo=slo)
 
     def _sequential(self, n: int, *, reload_each: bool) -> ServeResult:
         p = self.profile
@@ -83,10 +88,13 @@ class InferenceService:
             lat.append(l)
         return ServeResult(self.strategy, n, clock, lat, [(0.0, 1)])
 
-    def _kserve_sim(self, n: int, seed: int = 0, arrivals=None) -> ServeResult:
+    def _kserve_sim(self, n: int, seed: int = 0, arrivals=None,
+                    slo="standard") -> ServeResult:
         """One-model gateway run with the legacy KPA semantics: replicas
         never idle out (idle_window=inf) and scale-ups arrive warm (the
         scale-up delay stands in for scheduling + load, as pre-gateway)."""
+        if n == 0:                       # untrafficked models report nothing
+            return ServeResult(self.strategy, 0, 0.0, [], [(0.0, 1)])
         cfg = AutoscalerConfig(min_replicas=self.min_replicas,
                                max_replicas=self.max_replicas,
                                target_queue=self.target_queue,
@@ -96,8 +104,12 @@ class InferenceService:
         gw.deploy(self.predictor.name, self.predictor, self.profile,
                   autoscaler=cfg, max_batch=self.max_batch,
                   canary=self.canary, canary_fraction=self.canary_fraction)
-        res = gw.run([TrafficSpec(self.predictor.name, n, arrivals=arrivals)],
+        res = gw.run([TrafficSpec(self.predictor.name, n, arrivals=arrivals,
+                                  slo=slo)],
                      seed=seed).per_model[self.predictor.name]
         return ServeResult(self.strategy, n, res.total_time_s,
                            res.latencies_s, res.replica_trace,
-                           per_version=res.per_version)
+                           per_version=res.per_version,
+                           class_latencies=res.class_latencies,
+                           class_misses=res.class_misses,
+                           observed=res.observed)

@@ -2,6 +2,18 @@
 
 Every pipeline run / serving session records stage events; benchmarks read
 these to build the paper's Tables 4/5 (per-stage pipeline timing).
+
+Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
+  gateway:run                the whole simulation (a stage)
+  gateway:scale_up/down      replica launched / retired
+  gateway:scale_to_zero      pool emptied
+  gateway:cold_start         first batch on a weightless replica
+  gateway:scale_denied       launch refused (capacity or cloud_down)
+  gateway:capacity_exceeded  documented scale-from-zero budget breach
+  gateway:preempt            latency-class batch evicted an in-flight batch
+  gateway:failover/recover   deployment migrated off / back to its cloud
+  gateway:observed           measured arrival rate + realized service time
+                             per model (placement.replan input)
 """
 from __future__ import annotations
 
@@ -26,6 +38,13 @@ class EventLog:
             yield
         finally:
             self.record(name, time.perf_counter() - t0, **meta)
+
+    def named(self, name: str) -> list:
+        """All events with this name, in record order."""
+        return [e for e in self.events if e["name"] == name]
+
+    def count(self, name: str) -> int:
+        return len(self.named(name))
 
     def totals(self) -> dict:
         out: dict = {}

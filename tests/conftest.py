@@ -1,7 +1,24 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    # Hypothesis profiles for the property suites (test_properties.py,
+    # test_gateway_invariants.py): "dev" runs the full 200 examples,
+    # "ci" is a smaller deadline-free subset so the tier-1 workflow stays
+    # fast and deterministic (ci.yml pins HYPOTHESIS_PROFILE=ci and a fixed
+    # --hypothesis-seed).  Both disable the per-example deadline: simulated
+    # fleets are cheap but wall-clock-noisy on shared runners.
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("dev", max_examples=200, deadline=None)
+    _hyp_settings.register_profile("ci", max_examples=25, deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:                      # dev dep; suites importorskip/skip
+    pass
 
 
 def make_batch(cfg, B, S, key=None, labels=True):
@@ -20,6 +37,20 @@ def make_batch(cfg, B, S, key=None, labels=True):
     if cfg.family == "audio":
         b["frames"] = jax.random.normal(ks[3], (B, cfg.encoder_len, cfg.d_model))
     return b
+
+
+class AnalyticBackend:
+    """Closed-form gateway backend (the router only needs .name and
+    .service_time): deterministic service times with no hardware
+    measurement, shared by the gateway unit and invariant suites."""
+
+    def __init__(self, name, base_s=0.05, per_req_s=0.0):
+        self.name = name
+        self.base_s = base_s
+        self.per_req_s = per_req_s
+
+    def service_time(self, b):
+        return self.base_s + self.per_req_s * b
 
 
 @pytest.fixture(scope="session")

@@ -141,3 +141,27 @@ def test_poisson_latency_floor_is_network_path():
     floor = prof.network_rtt_s + prof.lb_overhead_s
     assert min(res.latencies_s) >= floor
     assert res.total_time_s >= max(res.latencies_s)
+
+
+def test_slo_passthrough_reports_per_class():
+    """stress_test(slo=...) reaches the gateway: the result carries the
+    class's percentiles and deadline-miss rate."""
+    pred = make_predictor()
+    pred.warmup((1, 32))
+    svc = InferenceService(pred, get_profile("gcp"), "kserve")
+    res = svc.stress_test(64, slo="latency")
+    pc = res.per_class()
+    assert set(pc) == {"latency"}
+    assert pc["latency"]["n"] == 64
+    assert 0.0 <= pc["latency"]["miss_rate"] <= 1.0
+    assert res.observed["n"] == 64
+
+
+def test_stress_test_zero_requests_is_empty_result():
+    """Regression: the gateway omits untrafficked models from per_model;
+    stress_test(0) must return an empty result, not raise KeyError."""
+    svc = InferenceService(make_predictor(), get_profile("gcp"), "kserve")
+    res = svc.stress_test(0)
+    assert res.n_requests == 0
+    assert res.latencies_s == []
+    assert res.total_time_s == 0.0
