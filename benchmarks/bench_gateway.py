@@ -2,14 +2,23 @@
 router with heterogeneous traffic (Poisson stream, burst + canary split, and
 a sparse workload forcing a scale-to-zero -> cold-start cycle), plus a
 placement plan across >=2 cloud profiles under both objectives, plus an
-SLO/failover scenario: three traffic classes on one fleet through a mid-run
-cloud outage, with the per-class p99 table against a no-priority baseline
-on the same seed.
+SLO/failover scenario (three traffic classes through a mid-run cloud outage
+vs a no-priority baseline on the same seed), plus an active-active
+split-vs-single-cloud scenario: the same capacity-constrained demand placed
+single-cloud and split, raced on identical traffic -- the split must win on
+at least one of {p99, simulated cost}.
+
+Every scenario also lands in ``benchmarks/BENCH_gateway.json`` (per-scenario
+p50/p99, deadline-miss rates, simulated dollars) so the perf trajectory is
+tracked across PRs instead of being print-only.
 
 Compute service times are measured (jitted matmuls of three widths); the
-network / cold-start terms come from the CloudProfiles (DESIGN.md)."""
+network / cold-start / price terms come from the CloudProfiles: any dollar
+or RTT figure here is a simulation output (DESIGN.md §1)."""
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 
 import jax
@@ -22,6 +31,8 @@ from repro.serving.gateway import (SLO_CLASSES, AutoscalerConfig,
                                    ModelDemand, Predictor, SLOClass,
                                    TrafficSpec, plan_placement)
 from repro.telemetry.events import EventLog
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_gateway.json"
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
 # fleet-scale offered load in Erlangs (rate derived from the measured
@@ -38,8 +49,17 @@ def _make_predictor(name: str, width: int, seed: int = 0) -> Predictor:
     return p
 
 
+def _model_record(res, cold: int) -> dict:
+    return {"p50_s": round(res.p50, 6), "p99_s": round(res.p99, 6),
+            "sim_cost_usd": round(res.cost_usd, 8),
+            "cold_starts": cold,
+            "deadline_miss": {c: s["miss_rate"]
+                              for c, s in res.per_class().items()}}
+
+
 def run() -> list[dict]:
     preds = {n: _make_predictor(n, w) for n, w in WIDTHS.items()}
+    bench: dict = {"schema": 2, "scenarios": {}}
 
     # -- placement: both objectives over gcp/ibm ---------------------------
     demands = [ModelDemand(n, PLANNED_LOADS[n] / (preds[n].service_time(8) / 8),
@@ -94,6 +114,11 @@ def run() -> list[dict]:
                        f"cold_starts={out.cold_starts[name]};"
                        f"hit_zero={any(r == 0 for _, r in trace[1:])}",
         })
+    bench["scenarios"]["fleet"] = {
+        "models": {m: _model_record(r, out.cold_starts[m])
+                   for m, r in out.per_model.items()},
+        "sim_cost_usd": round(out.total_cost_usd, 8),
+        "makespan_s": round(out.makespan_s, 6)}
     for obj, pl in plans.items():
         s = pl.summary()
         assign = ";".join(f"{m}->{a['cloud']}x{a['replicas']}"
@@ -116,11 +141,14 @@ def run() -> list[dict]:
     # cycle (zero pool between its two bursts, a cold start on each)
     assert out.cold_starts["large"] >= 2, out.cold_starts
     assert any(r == 0 for _, r in out.per_model["large"].replica_trace[1:])
-    rows.extend(_slo_failover_scenario(preds["large"]))
+    rows.extend(_slo_failover_scenario(preds["large"], bench))
+    rows.extend(_split_cost_scenario(preds["medium"], bench))
+    BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
+    print(f"wrote {BENCH_JSON}", file=sys.stderr)
     return rows
 
 
-def _slo_failover_scenario(pred: Predictor) -> list[dict]:
+def _slo_failover_scenario(pred: Predictor, bench: dict) -> list[dict]:
     """Three SLO classes on one two-replica fleet, a mid-run gcp outage with
     ibm standby, against a no-priority baseline (uniform class weights, no
     preemption -- same class NAMES so the per-class tables line up) on the
@@ -178,6 +206,13 @@ def _slo_failover_scenario(pred: Predictor) -> list[dict]:
     assert pri_log.count("gateway:failover") >= 1
     assert pri_log.count("gateway:recover") >= 1
 
+    bench["scenarios"]["slo_failover"] = {
+        "classes": pc,
+        "baseline": bc,
+        "sim_cost_usd": round(pri.total_cost_usd, 8),
+        "events": {k: pri_log.count(f"gateway:{k}")
+                   for k in ("failover", "recover", "preempt", "cold_start",
+                             "split")}}
     rows = [{"name": f"gateway_slo_{c}",
              "us_per_call": pc[c]["p99_s"] * 1e6,
              "derived": f"p50_s={pc[c]['p50_s']:.5f};"
@@ -196,3 +231,80 @@ def _slo_failover_scenario(pred: Predictor) -> list[dict]:
                    f"cold_start={pri_log.count('gateway:cold_start')}",
     })
     return rows
+
+
+def _split_cost_scenario(pred: Predictor, bench: dict) -> list[dict]:
+    """Active-active acceptance (ISSUE 3): one demand that needs more
+    replicas than the cheap cloud can hold, placed two ways on the SAME
+    measured service time and raced on the SAME traffic/seed --
+    single-cloud (forced all-expensive by capacity) vs split (cheap first,
+    spill the remainder).  The split must beat single-cloud on p99 or
+    simulated cost.  The traffic is open-loop UNDERLOAD -- both fleets are
+    provisioned for the window, so the makespan is pinned by the arrival
+    stream and the split's cheaper replica-seconds (2x gcp@1.0 + 2x
+    ibm@1.4 vs 4x ibm@1.4) decide the bill."""
+    t1 = pred.service_time(8) / 8        # per-request service, batched
+    need = 4
+    demand = ModelDemand("ranker", rate=0.7 * need / t1, service_time_s=t1)
+    clouds = [CloudCapacity(get_profile("gcp"), 2, 1.0),   # cheap, small
+              CloudCapacity(get_profile("ibm"), 8, 1.4)]   # fast, dear
+    single = plan_placement([demand], clouds, objective="cost")
+    split = plan_placement([demand], clouds, objective="cost", split=True)
+    assert single.assignments[0].shares == {"ibm": need}   # gcp can't fit it
+    assert split.assignments[0].shares == {"gcp": 2, "ibm": 2}
+
+    # ~60% of the SLOWER pool's throughput share (gcp per-batch path is the
+    # long pole), derived from measured+profile terms so any host lands in
+    # the same utilization regime
+    prof = get_profile("gcp")
+    per_batch = prof.network_rtt_s + prof.lb_overhead_s + pred.service_time(8)
+    n = 600
+    traffic = [TrafficSpec("ranker", n, arrival="poisson",
+                           rate=19.2 / per_batch)]
+
+    def run_once(assignment):
+        gw = Gateway()
+        gw.deploy("ranker", pred,
+                  split={get_profile(c): w
+                         for c, w in assignment.weights.items()},
+                  autoscaler=AutoscalerConfig(min_replicas=need,
+                                              max_replicas=need,
+                                              idle_window_s=np.inf),
+                  max_batch=8)
+        return gw.run(traffic, seed=0)
+
+    out_single = run_once(single.assignments[0])
+    out_split = run_once(split.assignments[0])
+    r_single = out_single.per_model["ranker"]
+    r_split = out_split.per_model["ranker"]
+    wins = []
+    if r_split.p99 < r_single.p99:
+        wins.append("p99")
+    if out_split.total_cost_usd < out_single.total_cost_usd:
+        wins.append("cost")
+    print(f"split vs single-cloud: p99 {r_split.p99:.5f} vs "
+          f"{r_single.p99:.5f}, sim $ {out_split.total_cost_usd:.6f} vs "
+          f"{out_single.total_cost_usd:.6f} -> wins={wins}", file=sys.stderr)
+    # acceptance: active-active must beat single-cloud on at least one axis
+    assert wins, (r_split.p99, r_single.p99, out_split.total_cost_usd,
+                  out_single.total_cost_usd)
+
+    bench["scenarios"]["split_cost"] = {
+        "single": {"p50_s": round(r_single.p50, 6),
+                   "p99_s": round(r_single.p99, 6),
+                   "sim_cost_usd": round(out_single.total_cost_usd, 8),
+                   "plan": single.summary()["assignments"]},
+        "split": {"p50_s": round(r_split.p50, 6),
+                  "p99_s": round(r_split.p99, 6),
+                  "sim_cost_usd": round(out_split.total_cost_usd, 8),
+                  "plan": split.summary()["assignments"]},
+        "wins": wins}
+    return [{
+        "name": "gateway_split_vs_single",
+        "us_per_call": r_split.p99 * 1e6,
+        "derived": f"wins={'+'.join(wins)};"
+                   f"split_p99_s={r_split.p99:.5f};"
+                   f"single_p99_s={r_single.p99:.5f};"
+                   f"split_cost={out_split.total_cost_usd:.6f};"
+                   f"single_cost={out_single.total_cost_usd:.6f}",
+    }]

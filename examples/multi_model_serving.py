@@ -1,7 +1,9 @@
 """Serve a heterogeneous model fleet through the model-mesh gateway:
 a LeNet classifier, a synthetic embedding model, and a continuous-batched
 LLM behind one router -- with a canary split, a scale-to-zero cold-start
-cycle, and a multi-cloud placement plan.
+cycle, a SPLIT-aware multi-cloud placement plan (a model may serve
+active-active from several clouds at once), and the simulated dollar bill
+for the run (CloudProfile price sheet; a simulation output, DESIGN.md §1).
 
     PYTHONPATH=src python examples/multi_model_serving.py [--arch h2o_danube_3_4b]
 """
@@ -58,24 +60,28 @@ def main():
     demands = [ModelDemand("lenet", 3.0 / t_lenet, t_lenet),
                ModelDemand("embed", 1.0 / t_embed, t_embed),
                ModelDemand("llm", 0.5 / t_llm, t_llm)]
-    clouds = [CloudCapacity(get_profile("gcp"), 10, 1.0),
+    # gcp is cheap but small: the heaviest model cannot fit there whole, so
+    # the split planner serves it ACTIVE-ACTIVE from both clouds at once
+    clouds = [CloudCapacity(get_profile("gcp"), 4, 1.0),
               CloudCapacity(get_profile("ibm"), 10, 1.4)]
-    plan = plan_placement(demands, clouds, objective="p99")
-    print("placement (p99):", json.dumps(plan.summary(), indent=1))
+    plan = plan_placement(demands, clouds, objective="cost", split=True)
+    print("placement (cost, split-aware):",
+          json.dumps(plan.summary(), indent=1))
     assert plan.feasible, "fleet does not fit the configured clouds"
-    cloud_of = {a.model: a.cloud for a in plan.assignments}
+    split_of = {a.model: {get_profile(c): w for c, w in a.weights.items()}
+                for a in plan.assignments}
 
     log = EventLog()
     gw = Gateway(capacity=plan.capacity_map(), log=log)
-    gw.deploy("lenet", classifier, get_profile(cloud_of["lenet"]),
+    gw.deploy("lenet", classifier, split=split_of["lenet"],
               autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
                                           target_queue=8, idle_window_s=2.0),
               max_batch=8)
-    gw.deploy("embed", embedder, get_profile(cloud_of["embed"]),
+    gw.deploy("embed", embedder, split=split_of["embed"],
               autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
                                           target_queue=8, idle_window_s=2.0),
               max_batch=16, canary=embedder_v2, canary_fraction=0.25)
-    gw.deploy("llm", llm, get_profile(cloud_of["llm"]),
+    gw.deploy("llm", llm, split=split_of["llm"],
               autoscaler=AutoscalerConfig(min_replicas=0, max_replicas=2,
                                           scale_up_delay_s=0.5,
                                           idle_window_s=1.0), max_batch=4)
@@ -86,6 +92,9 @@ def main():
         TrafficSpec("llm", 4, start_s=8.0),        # scale-to-zero -> cold again
     ], seed=0)
     print("fleet:", json.dumps(out.summary(), indent=1))
+    print("final split weights:", json.dumps(gw.final_weights, indent=1))
+    print(f"simulated run cost: ${out.total_cost_usd:.6f} "
+          "(price-sheet output, not a measurement)")
     print("llm replica trace (scale-to-zero cycle):",
           [(round(t, 3), p) for t, p in out.per_model["llm"].replica_trace])
 

@@ -1,12 +1,15 @@
 """SLO-aware serving through a cloud outage: three traffic classes
 (latency / standard / batch) on one fleet, a mid-run gcp failure with ibm
-standby, and an observed-load re-plan afterwards.
+standby, an observed-load re-plan afterwards -- and the revised plan
+applied LIVE to a second window via a MigrationPlan (drain-and-shift, no
+requests dropped).
 
-The run shows the full ISSUE-2 loop: class-weighted dispatch + preemption
-keeps the latency class fast while the batch class absorbs the queueing;
-the outage drains gcp, cold-starts the pool on ibm, and migrates back on
-recovery; ``placement.replan`` then rebuilds the plan from what the
-gateway MEASURED rather than what we guessed.
+The run shows the full loop: class-weighted dispatch + preemption keeps
+the latency class fast while the batch class absorbs the queueing; the
+outage zeroes gcp's split weight (failover is a degenerate split) and
+restores it on recovery; ``placement.replan`` rebuilds the plan from what
+the gateway MEASURED rather than what we guessed, and ``diff_plans``
+turns the delta into a mid-run migration.
 
     PYTHONPATH=src python examples/slo_failover.py
 """
@@ -18,9 +21,9 @@ import numpy as np
 
 from repro.clouds.profiles import get_profile
 from repro.serving.gateway import (AutoscalerConfig, CloudCapacity,
-                                   FailureSpec, Gateway, ModelDemand,
-                                   Predictor, TrafficSpec, plan_placement,
-                                   replan)
+                                   FailureSpec, Gateway, MigrationSpec,
+                                   ModelDemand, Predictor, TrafficSpec,
+                                   plan_placement, replan)
 from repro.telemetry.events import EventLog
 
 
@@ -72,12 +75,32 @@ def main():
     revised = replan(plan, out)
     print("replanned from observed load:",
           json.dumps(revised.summary(), indent=1))
+    print(f"simulated run cost: ${out.total_cost_usd:.6f} "
+          "(price-sheet output, not a measurement)")
 
     assert log.count("gateway:failover") >= 1
     assert log.count("gateway:recover") >= 1
     assert log.count("gateway:preempt") >= 1
     pc = out.per_class()
     assert pc["latency"]["p99_s"] <= pc["batch"]["p99_s"]
+
+    # apply the revised plan LIVE to a fresh window: the router shifts the
+    # split mid-run (in-flight batches finish where they started, the
+    # backlog re-routes, relaunches arrive cold on the destination).
+    # diff_plans(plan, revised) is the general plan-to-plan form; here the
+    # RUNNING placement (gcp primary) is what differs, so we migrate to the
+    # revised assignment's weights directly
+    target = dict(next(a for a in revised.assignments
+                       if a.model == "ranker").weights)
+    out2 = gw.run([TrafficSpec("ranker", 160, slo="standard",
+                               arrival="poisson", rate=96 / drain)],
+                  seed=1,
+                  migrations=[MigrationSpec(0.3 * drain, {"ranker": target})])
+    print("live migration applied mid-run ->", target)
+    print("post-migration split:", gw.final_weights["ranker"],
+          f"- sim cost ${out2.total_cost_usd:.6f}")
+    assert log.count("gateway:migrate") >= 1
+    assert out2.per_model["ranker"].n_requests == 160
 
 
 if __name__ == "__main__":

@@ -1,19 +1,23 @@
 """Model-mesh serving gateway: multi-model routing with SLO classes,
-preemption and cloud failover (router.py), scale-to-zero autoscaling
-(autoscaler.py), multi-cloud placement + observed-load re-planning
-(placement.py).  See DESIGN.md §Gateway."""
-from .autoscaler import Autoscaler, AutoscalerConfig
-from .placement import (Assignment, CloudCapacity, ModelDemand, PlacementPlan,
+preemption, active-active multi-cloud splits and live migration
+(router.py), cost-aware scale-to-zero autoscaling (autoscaler.py),
+split-aware multi-cloud placement + observed-load re-planning + plan
+diffs (placement.py).  See DESIGN.md §Gateway."""
+from .autoscaler import Autoscaler, AutoscalerConfig, PoolView
+from .placement import (Assignment, CloudCapacity, MigrationPlan,
+                        MigrationStep, ModelDemand, PlacementPlan, diff_plans,
                         est_p99_s, plan_placement, replan, replicas_needed)
 from .router import (SLO_CLASSES, BatcherBackend, Deployment, FailureSpec,
-                     Gateway, GatewayResult, Predictor, ServeResult, SLOClass,
-                     TrafficSpec, resolve_slo)
+                     Gateway, GatewayResult, MigrationSpec, Predictor,
+                     ReplanConfig, ServeResult, SLOClass, TrafficSpec,
+                     resolve_slo)
 
 __all__ = [
-    "Autoscaler", "AutoscalerConfig",
-    "Assignment", "CloudCapacity", "ModelDemand", "PlacementPlan",
-    "est_p99_s", "plan_placement", "replan", "replicas_needed",
+    "Autoscaler", "AutoscalerConfig", "PoolView",
+    "Assignment", "CloudCapacity", "MigrationPlan", "MigrationStep",
+    "ModelDemand", "PlacementPlan", "diff_plans", "est_p99_s",
+    "plan_placement", "replan", "replicas_needed",
     "BatcherBackend", "Deployment", "FailureSpec", "Gateway", "GatewayResult",
-    "Predictor", "ServeResult", "SLOClass", "SLO_CLASSES", "TrafficSpec",
-    "resolve_slo",
+    "MigrationSpec", "Predictor", "ReplanConfig", "ServeResult", "SLOClass",
+    "SLO_CLASSES", "TrafficSpec", "resolve_slo",
 ]

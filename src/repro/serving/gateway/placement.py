@@ -1,12 +1,20 @@
 """Multi-cloud placement planner (automated placement, MLModelCI analog --
 arXiv:2006.05096): assign models to cloud profiles to minimize cost or p99
-under per-cloud replica capacity.
+under per-cloud replica capacity.  With ``split=True`` an assignment may
+SPREAD one model across several clouds -- fractional traffic shares backed
+by per-cloud replica counts -- which is what the router's active-active
+mode (serving/gateway/router.py) consumes.
 
 Sizing is queueing-theoretic, not simulated: a model offering
 ``rate * service_time`` Erlangs needs ``ceil(load / target_util)`` replicas,
 and its latency estimate inflates service time by an M/M/1-style waiting
 term per replica.  The plan's capacity map feeds Gateway(capacity=...) so
 the discrete-event simulation enforces what the planner assumed.
+
+``diff_plans(old, new)`` emits a MigrationPlan -- the per-model weight /
+replica deltas between two plans -- which ``Gateway.run(migrations=[
+MigrationSpec(at_s, plan)])`` applies live, mid-run, without dropping
+requests (drain-and-shift, router.py).
 """
 from __future__ import annotations
 
@@ -34,7 +42,13 @@ class ModelDemand:
 class CloudCapacity:
     profile: CloudProfile
     max_replicas: int
-    cost_per_replica_hr: float
+    cost_per_replica_hr: Optional[float] = None  # None: profile price sheet
+
+    @property
+    def replica_cost_hr(self) -> float:
+        if self.cost_per_replica_hr is not None:
+            return self.cost_per_replica_hr
+        return self.profile.cost_per_s * 3600.0
 
 
 def replicas_needed(demand: ModelDemand, *,
@@ -63,11 +77,26 @@ def est_p99_s(profile: CloudProfile, demand: ModelDemand,
 
 @dataclasses.dataclass
 class Assignment:
+    """One model's placement: per-cloud replica shares plus the traffic
+    weights the router should split arrivals by.  A single-cloud placement
+    is the degenerate one-entry case; ``shares == {}`` means unplaceable
+    under capacity.  Weights always sum to 1 for a placed model."""
     model: str
-    cloud: Optional[str]         # None => unplaceable under capacity
-    replicas: int
-    est_p99_s: float
+    shares: dict                 # cloud -> replicas (int)
+    weights: dict                # cloud -> traffic fraction
+    est_p99_s: float             # worst share's tail estimate
     cost_hr: float
+
+    @property
+    def cloud(self) -> Optional[str]:
+        """Primary cloud (largest traffic weight); None when unplaceable."""
+        if not self.shares:
+            return None
+        return max(self.weights, key=lambda c: (self.weights[c], c))
+
+    @property
+    def replicas(self) -> int:
+        return sum(self.shares.values())
 
     @property
     def saturated(self) -> bool:
@@ -76,16 +105,24 @@ class Assignment:
         return not math.isfinite(self.est_p99_s)
 
 
+def _single(model: str, cloud: Optional[str], replicas: int,
+            p99: float, cost: float) -> Assignment:
+    if cloud is None:
+        return Assignment(model, {}, {}, math.inf, 0.0)
+    return Assignment(model, {cloud: replicas}, {cloud: 1.0}, p99, cost)
+
+
 @dataclasses.dataclass
 class PlacementPlan:
     objective: str
     assignments: list
     feasible: bool
     clouds: list = dataclasses.field(default_factory=list)  # CloudCapacity
+    split: bool = False          # planner allowed multi-cloud assignments
 
     @property
     def total_cost_hr(self) -> float:
-        return sum(a.cost_hr for a in self.assignments if a.cloud)
+        return sum(a.cost_hr for a in self.assignments if a.shares)
 
     @property
     def worst_p99_s(self) -> float:
@@ -94,62 +131,186 @@ class PlacementPlan:
         report the finite tail of whatever happened to fit."""
         if any(a.saturated for a in self.assignments):
             return math.inf
-        return max((a.est_p99_s for a in self.assignments if a.cloud),
+        return max((a.est_p99_s for a in self.assignments if a.shares),
                    default=0.0)
 
     def capacity_map(self) -> dict:
         """Planned replica budget per cloud, ready for Gateway(capacity=...)."""
         out: dict = {}
         for a in self.assignments:
-            if a.cloud:
-                out[a.cloud] = out.get(a.cloud, 0) + a.replicas
+            for cloud, n in a.shares.items():
+                out[cloud] = out.get(cloud, 0) + n
         return out
 
     def summary(self) -> dict:
         fin = lambda x: round(x, 6) if math.isfinite(x) else "inf"
         return {"objective": self.objective, "feasible": self.feasible,
+                "split": self.split,
                 "total_cost_hr": round(self.total_cost_hr, 4),
                 "worst_p99_s": fin(self.worst_p99_s),
                 "assignments": {a.model: {
                     "cloud": a.cloud, "replicas": a.replicas,
                     "est_p99_s": fin(a.est_p99_s),
                     "saturated": a.saturated,
-                    "cost_hr": round(a.cost_hr, 4)}
+                    "cost_hr": round(a.cost_hr, 4),
+                    **({"shares": dict(a.shares),
+                        "weights": {c: round(w, 6)
+                                    for c, w in a.weights.items()}}
+                       if len(a.shares) > 1 else {})}
                     for a in self.assignments}}
 
 
-def plan_placement(models: list, clouds: list,
-                   objective: str = "cost") -> PlacementPlan:
+def _split_assign(d: ModelDemand, need: int, clouds: list,
+                  remaining: dict, objective: str) -> Optional[Assignment]:
+    """Fill the ranked clouds first-to-last until the replica need is met,
+    splitting the model when the best cloud alone cannot hold it.  Traffic
+    weights are proportional to replica shares, so per-pool utilization is
+    uniform and the share-weighted tail estimate stays honest."""
+    def rank(c):
+        p99 = est_p99_s(c.profile, d, need)
+        cost = c.replica_cost_hr
+        return ((cost, p99, c.profile.name) if objective == "cost"
+                else (p99, cost, c.profile.name))
+
+    shares: dict = {}
+    left = need
+    for c in sorted(clouds, key=rank):
+        take = min(remaining[c.profile.name], left)
+        if take <= 0:
+            continue
+        shares[c.profile.name] = take
+        left -= take
+        if left == 0:
+            break
+    if left > 0:                 # does not fit anywhere: leave capacity alone
+        return None
+    by_name = {c.profile.name: c for c in clouds}
+    weights = {cl: n / need for cl, n in shares.items()}
+    # a mixture's tail is pinned by its SLOWEST share as soon as that share
+    # holds more than ~1% of traffic, so the estimate is the max over
+    # pools, never a weight-average that would under-report it
+    est = max(est_p99_s(
+        by_name[cl].profile,
+        ModelDemand(d.name, d.rate * weights[cl], d.service_time_s), n)
+        for cl, n in shares.items())
+    cost = sum(n * by_name[cl].replica_cost_hr for cl, n in shares.items())
+    for cl, n in shares.items():
+        remaining[cl] -= n
+    return Assignment(d.name, shares, weights, est, cost)
+
+
+def plan_placement(models: list, clouds: list, objective: str = "cost", *,
+                   split: bool = False) -> PlacementPlan:
     """Greedy by offered load, heaviest model first: each model takes the
     feasible cloud minimizing (cost, p99) or (p99, cost).  Greedy is exact
     enough at fleet sizes where this repo runs (tens of models, few clouds)
-    and keeps the plan explainable."""
+    and keeps the plan explainable.
+
+    split=True allows fractional assignments: a model fills the ranked
+    clouds in order, spilling onto the next when capacity runs out, and the
+    plan records per-cloud traffic weights for the router's active-active
+    splitter.  A fleet that is infeasible single-cloud can be feasible
+    split (the capacity fragments add up)."""
     assert objective in ("cost", "p99")
     remaining = {c.profile.name: c.max_replicas for c in clouds}
     assignments, feasible = [], True
     for d in sorted(models, key=lambda d: d.load, reverse=True):
         need = replicas_needed(d)
+        if split:
+            a = _split_assign(d, need, clouds, remaining, objective)
+            if a is None:
+                feasible = False
+                a = _single(d.name, None, 0, math.inf, 0.0)
+            assignments.append(a)
+            continue
         best = None
         for c in clouds:
             if remaining[c.profile.name] < need:
                 continue
             p99 = est_p99_s(c.profile, d, need)
-            cost = need * c.cost_per_replica_hr
+            cost = need * c.replica_cost_hr
             key = (cost, p99) if objective == "cost" else (p99, cost)
             if best is None or key < best[0]:
                 best = (key, c, p99, cost)
         if best is None:
             feasible = False
-            assignments.append(Assignment(d.name, None, 0, math.inf, 0.0))
+            assignments.append(_single(d.name, None, 0, math.inf, 0.0))
             continue
         _, c, p99, cost = best
         remaining[c.profile.name] -= need
-        assignments.append(Assignment(d.name, c.profile.name, need, p99, cost))
-    return PlacementPlan(objective, assignments, feasible, clouds=list(clouds))
+        assignments.append(_single(d.name, c.profile.name, need, p99, cost))
+    return PlacementPlan(objective, assignments, feasible,
+                         clouds=list(clouds), split=split)
+
+
+# -- plan diffs: the live-migration contract ---------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MigrationStep:
+    """Target state for ONE model: the traffic weights the router should
+    shift to (sum to 1), the planned per-cloud replica counts (a sizing
+    hint for relaunches), and the CloudProfiles backing any cloud the
+    deployment has not seen before."""
+    model: str
+    weights: dict                # cloud -> target traffic fraction
+    replicas: dict               # cloud -> planned replicas
+    profiles: dict               # cloud -> CloudProfile
+
+    def __post_init__(self):
+        if not self.weights or any(w < 0 for w in self.weights.values()):
+            raise ValueError(f"{self.model}: weights must be non-negative "
+                             f"and non-empty, got {self.weights}")
+        total = sum(self.weights.values())
+        if abs(total - 1.0) > 1e-6:
+            raise ValueError(f"{self.model}: migration weights must sum "
+                             f"to 1, got {total}")
+        missing = set(self.weights) - set(self.profiles)
+        if missing:
+            raise ValueError(f"{self.model}: no CloudProfile for "
+                             f"{sorted(missing)}")
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """The diff between two PlacementPlans: one MigrationStep per model
+    whose split changed.  Applied live by the router (drain-and-shift)."""
+    steps: list
+
+    @property
+    def models(self) -> list:
+        return [s.model for s in self.steps]
+
+    def summary(self) -> dict:
+        return {s.model: {"weights": {c: round(w, 6)
+                                      for c, w in s.weights.items()},
+                          "replicas": dict(s.replicas)}
+                for s in self.steps}
+
+
+def diff_plans(old: PlacementPlan, new: PlacementPlan) -> MigrationPlan:
+    """Per-model weight/replica deltas between two plans.  Models placed
+    identically in both plans are omitted; a model unplaceable in ``new``
+    is omitted too (there is no routable target to shift it to -- the
+    plan's ``feasible`` flag already says so)."""
+    profiles = {c.profile.name: c.profile
+                for c in list(old.clouds) + list(new.clouds)}
+    old_by = {a.model: a for a in old.assignments}
+    steps = []
+    for a in new.assignments:
+        if not a.shares:
+            continue
+        o = old_by.get(a.model)
+        if o is not None and o.shares == a.shares and o.weights == a.weights:
+            continue
+        steps.append(MigrationStep(
+            a.model, dict(a.weights), dict(a.shares),
+            {c: profiles[c] for c in a.shares}))
+    return MigrationPlan(steps)
 
 
 def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
-           objective: Optional[str] = None) -> PlacementPlan:
+           objective: Optional[str] = None,
+           split: Optional[bool] = None) -> PlacementPlan:
     """Re-plan from OBSERVED load (closing the estimate -> measure ->
     re-plan loop, MLModelCI analog): each model's demand is rebuilt from
     the arrival rate and realized per-request service time the gateway
@@ -157,10 +318,11 @@ def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
     again under the same clouds and objective.
 
     ``result`` is a GatewayResult from Gateway.run; ``clouds`` defaults to
-    the CloudCapacity list the original plan was built against.  Models in
-    the original plan that saw no traffic this window (Gateway.run omits
-    them from per_model) keep their prior assignment: their replicas stay
-    reserved, so the revised capacity_map still covers the whole fleet."""
+    the CloudCapacity list the original plan was built against; ``split``
+    defaults to whatever the original plan allowed.  Models in the original
+    plan that saw no traffic this window (Gateway.run omits them from
+    per_model) keep their prior assignment: their replicas stay reserved,
+    so the revised capacity_map still covers the whole fleet."""
     clouds = list(clouds) if clouds is not None else list(plan.clouds)
     if not clouds:
         raise ValueError("replan needs the CloudCapacity list: the original "
@@ -176,14 +338,15 @@ def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
     kept = [a for a in plan.assignments if a.model not in result.per_model]
     reserve: dict = {}
     for a in kept:
-        if a.cloud:
-            reserve[a.cloud] = reserve.get(a.cloud, 0) + a.replicas
+        for cloud, n in a.shares.items():
+            reserve[cloud] = reserve.get(cloud, 0) + n
     shrunk = [dataclasses.replace(
         c, max_replicas=c.max_replicas - reserve.get(c.profile.name, 0))
         for c in clouds]
     new = plan_placement(demands, shrunk, objective=objective
-                         or plan.objective)
+                         or plan.objective,
+                         split=plan.split if split is None else split)
     new.assignments.extend(kept)
-    new.feasible = new.feasible and all(a.cloud for a in kept)
+    new.feasible = new.feasible and all(a.shares for a in kept)
     new.clouds = clouds                  # report the REAL budgets, not the
     return new                           # reservation-shrunk ones

@@ -1,10 +1,12 @@
-"""Model-mesh serving gateway: one router fronting MANY models.
+"""Model-mesh serving gateway: one router fronting MANY models, each of
+which may be ACTIVE-ACTIVE across several clouds at once.
 
 The pre-gateway repo could stress-test a single InferenceService; this
 package is the fleet layer (ROADMAP north star: "heavy traffic from
 millions of users").  A Gateway owns per-model Deployments -- each a
-backend (Predictor or BatcherBackend), a CloudProfile, a replica pool and
-an Autoscaler -- and runs a mixed multi-model workload (per-model burst /
+backend (Predictor or BatcherBackend), one replica pool PER CLOUD
+(``{cloud: _Pool}``), a weighted traffic split over those pools, and an
+Autoscaler -- and runs a mixed multi-model workload (per-model burst /
 Poisson TrafficSpecs) through ONE discrete-event simulation with shared
 per-cloud replica capacity.
 
@@ -16,20 +18,38 @@ InferenceService (serving/kserve.py) is now a single-model client of this
 router, so the paper's Table-3 stress test and the fleet simulation share
 one event loop.
 
+Splits (DESIGN.md S3): a Deployment carries per-cloud traffic weights
+(``deploy(split={profile: weight})``; a plain ``profile`` is the
+degenerate one-entry split).  Each arrival is routed to a pool by a
+seeded uniform draw against the LIVE weights, each pool keeps its own
+queues / replicas / epochs, and every latency is charged with that
+pool's cloud constants.  Weights move mid-run three ways, all through
+one primitive (``_set_weights``, drain-and-shift, exactly-once):
+
+- ``gw.run(migrations=[MigrationSpec(at_s, plan)])`` applies a
+  placement.MigrationPlan live (``gateway:migrate reason=plan``);
+- a ReplanConfig on the Gateway probes the fleet periodically and shifts
+  weight off a pool that is overloaded-but-blocked (or missing
+  deadlines) toward the CHEAPEST cloud with headroom, and consolidates
+  an idle fleet off its most expensive cloud (``gateway:migrate`` with
+  reason overload / miss_rate / cost);
+- a FailureSpec outage is a degenerate split: the dead cloud's weight
+  drops to 0 (``gateway:failover``), survivors -- or the zero-weight
+  standby pool -- absorb the traffic, and recovery restores the nominal
+  weights (``gateway:recover``).  There is no separate failover code
+  path.
+
 SLO layer (DESIGN.md S3): every request carries an SLOClass
 (latency / standard / batch).  Dispatch serves the queue maximizing
 ``weight * age-of-oldest`` instead of longest-queue; a ``latency`` batch
 may preempt an in-flight ``batch`` batch (the victim re-queues,
-gateway:preempt).  A FailureSpec marks a cloud down mid-run: affected
-pools drain (in-flight work re-queues), deployments fail over to their
-standby CloudProfile paying control-plane + model_load_s cold starts
-(gateway:failover), and migrate back the same way when the window ends
-(gateway:recover).
+gateway:preempt).
 
-Event kinds: "arr" request arrival, "up" replica joins the pool after the
+Event kinds: "arr" request arrival, "up" replica joins a pool after the
 control-plane delay, "free" replica finishes a batch, "idle" idle-window
 expiry check (scale-down / scale-to-zero, autoscaler.py), "fail"/"recover"
-FailureSpec window edges.
+FailureSpec window edges, "replan" a MigrationSpec firing, "probe" an
+auto-replan check.
 """
 from __future__ import annotations
 
@@ -42,9 +62,10 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from ...clouds.profiles import CloudProfile
+from ...clouds.profiles import CloudProfile, get_profile
 from ...telemetry.events import EventLog
-from .autoscaler import Autoscaler, AutoscalerConfig
+from .autoscaler import Autoscaler, AutoscalerConfig, PoolView
+from .placement import MigrationStep
 
 
 # -- SLO classes -------------------------------------------------------------
@@ -99,6 +120,53 @@ class FailureSpec:
             raise ValueError("FailureSpec needs at_s >= 0 and duration_s > 0")
 
 
+@dataclasses.dataclass(frozen=True)
+class MigrationSpec:
+    """Apply a placement.MigrationPlan (or a raw ``{model: {cloud:
+    weight}}`` dict) at simulated time ``at_s``, mid-run, without dropping
+    requests.  Injected via Gateway.run(migrations=[...])."""
+    at_s: float
+    plan: Any
+
+    def __post_init__(self):
+        if self.at_s < 0:
+            raise ValueError("MigrationSpec needs at_s >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Continuous re-planning knobs (Gateway(replan=...)).  Every
+    ``check_every_s`` of simulated time the router probes each model:
+
+    - a pool whose queue exceeds ``overload_factor * target_queue *
+      replicas`` while its cloud can no longer grow, or a model whose
+      recent deadline-miss rate breaches ``max_miss_rate`` (over at least
+      ``min_window_n`` completions), sustained for ``sustain`` consecutive
+      probes, shifts ``shift`` of the hottest pool's weight toward the
+      cheapest cloud with headroom (gateway:migrate);
+    - with ``consolidate``, a fully idle multi-cloud split sustained for
+      ``sustain`` probes folds its most expensive pool into the cheapest
+      one (weight -> 0, so the expensive replicas idle out first).
+    """
+    check_every_s: float = 0.25
+    overload_factor: float = 2.0
+    max_miss_rate: float = 0.5
+    min_window_n: int = 8
+    shift: float = 0.5
+    sustain: int = 2
+    consolidate: bool = True
+
+    def __post_init__(self):
+        if self.check_every_s <= 0:
+            raise ValueError("check_every_s must be > 0")
+        if not 0 < self.shift <= 1:
+            raise ValueError("shift must be in (0, 1]")
+        if self.sustain < 1:
+            raise ValueError("sustain must be >= 1")
+        if self.min_window_n < 1:     # also guards the miss-rate division
+            raise ValueError("min_window_n must be >= 1")
+
+
 # -- results / backends (moved from kserve.py; it re-exports them) ----------
 
 def _class_stats(lats: list, misses: int) -> dict:
@@ -120,6 +188,10 @@ class ServeResult:
     class_latencies: dict = dataclasses.field(default_factory=dict)
     class_misses: dict = dataclasses.field(default_factory=dict)
     observed: dict = dataclasses.field(default_factory=dict)
+    # SIMULATED dollars (CloudProfile.cost_per_s price sheet, DESIGN.md S1):
+    # replica-seconds provisioned x per-cloud price, never a measurement
+    cost_usd: float = 0.0
+    cost_by_cloud: dict = dataclasses.field(default_factory=dict)
 
     @property
     def p50(self):
@@ -139,6 +211,8 @@ class ServeResult:
                 "total_s": round(self.total_time_s, 4),
                 "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
                 "replicas_max": max([r for _, r in self.replica_trace], default=1),
+                **({"sim_cost_usd": round(self.cost_usd, 6)}
+                   if self.cost_by_cloud else {}),
                 **({"per_version": self.per_version} if self.per_version else {}),
                 **({"per_class": self.per_class()}
                    if self.class_latencies else {})}
@@ -240,6 +314,24 @@ def _pow2(b: int) -> int:
     return n
 
 
+def _apportion(total: int, weights: dict) -> dict:
+    """Largest-remainder split of ``total`` replicas by weight (zero-weight
+    pools get zero); deterministic tie-break by remainder, weight, name."""
+    live = {c: w for c, w in weights.items() if w > 0}
+    out = {c: 0 for c in weights}
+    if not live or total <= 0:
+        return out
+    s = sum(live.values())
+    exact = {c: total * w / s for c, w in live.items()}
+    for c in live:
+        out[c] = int(math.floor(exact[c]))
+    left = total - sum(out.values())
+    order = sorted(live, key=lambda c: (-(exact[c] - out[c]), -live[c], c))
+    for c in order[:left]:
+        out[c] += 1
+    return out
+
+
 # -- workload / deployment ---------------------------------------------------
 
 @dataclasses.dataclass
@@ -271,12 +363,14 @@ class TrafficSpec:
 class Deployment:
     name: str
     backend: Any                         # .name + .service_time(b) -> s
-    profile: CloudProfile
+    profile: CloudProfile                # primary cloud (deadline base)
     autoscaler: Autoscaler
     max_batch: int = 32
     canary: Any = None
     canary_fraction: float = 0.0
-    standby: Optional[CloudProfile] = None   # failover target cloud
+    standby: Optional[CloudProfile] = None   # zero-weight failover pool
+    placements: list = dataclasses.field(default_factory=list)
+    # [(CloudProfile, weight)]: the declared split, standby appended at 0
 
     @property
     def backends(self) -> list:
@@ -290,21 +384,45 @@ class _Replica:
     warm: bool                           # cold replicas pay model_load_s once
     busy: bool = False
     last_active: float = 0.0
+    created_s: float = 0.0               # provisioned-time start (cost sheet)
     epoch: int = 0                       # bumps per assignment/preemption;
     inflight: Optional[dict] = None      # stale "free" events check it
 
 
+class _Pool:
+    """One per-cloud replica pool of a deployment: its own queues, replicas,
+    epochs and launch generation.  ``weight`` is the LIVE traffic share
+    (failover zeroes it), ``nominal`` the configured share migrations edit
+    and recovery restores, ``floor`` its apportioned slice of min_replicas.
+    """
+
+    def __init__(self, profile: CloudProfile, weight: float):
+        self.profile = profile
+        self.weight = float(weight)
+        self.nominal = float(weight)
+        self.floor = 0
+        self.replicas: dict[int, _Replica] = {}
+        self.pending: dict[tuple, list] = {}
+        self.scheduled_up = 0
+        self.generation = 0              # bumps on drain; stale "up" dropped
+        self.replica_seconds = 0.0       # provisioned time (simulated $)
+
+    def size(self) -> int:
+        return len(self.replicas) + self.scheduled_up
+
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self.pending.values())
+
+
 class _ModelState:
     def __init__(self, dep: Deployment, arr: np.ndarray, ver: np.ndarray,
-                 cls: list):
+                 cls: list, route_u: np.ndarray):
         self.dep = dep
         self.arr = arr
         self.ver = ver
         self.cls = cls                   # SLOClass per request index
+        self.route_u = route_u           # uniform draw per request (routing)
         self.lat = np.full(len(arr), -1.0)
-        # dispatch queues keyed (version, slo name); requests stay in
-        # arrival order within a queue
-        self.pending: dict[tuple, list] = {}
         self.slo_by_name: dict[str, SLOClass] = {}
         for c in cls:
             prev = self.slo_by_name.setdefault(c.name, c)
@@ -312,23 +430,27 @@ class _ModelState:
                 raise ValueError(        # defs would silently share one
                     f"conflicting SLOClass definitions named {c.name!r} "
                     f"on {dep.name!r}: {prev} vs {c}")
-        self.replicas: dict[int, _Replica] = {}
-        self.scheduled_up = 0
-        self.next_rid = 0
-        self.generation = 0              # bumps on failover; stale "up"
-        self.active = dep.profile        # current cloud (failover switches)
-        self.trace: list = []
+        self.pools: dict[str, _Pool] = {}
+        for prof, w in dep.placements:
+            self.pools[prof.name] = _Pool(prof, w)
+        self.next_rid = 0                # rids are model-global: the batch
+        self.trace: list = []            # audit keys (model, rid) stay unique
         self.cold_starts = 0
         self.per_version: dict[str, int] = {}
         self.served = 0
         self.busy_s = 0.0                # realized backend service seconds
+        self.deadline_base = 0.0         # warm single-request path, primary
+        self.win_n = 0                   # completions since the last probe
+        self.win_miss = 0
+        self.win_epoch = 0               # bumps on probe reset: a reclaim
+        self.streak = {"hot": 0, "cold": 0}   # only undoes its own window
+        self.streak_why = "overload"     # what armed the hot streak
 
-    @property
-    def pool(self) -> int:
-        return len(self.replicas) + self.scheduled_up
+    def total_pool(self) -> int:
+        return sum(p.size() for p in self.pools.values())
 
     def queue_len(self) -> int:
-        return sum(len(q) for q in self.pending.values())
+        return sum(p.queue_len() for p in self.pools.values())
 
 
 @dataclasses.dataclass
@@ -336,6 +458,13 @@ class GatewayResult:
     per_model: dict                      # name -> ServeResult
     cold_starts: dict                    # name -> int
     makespan_s: float
+    costs: dict = dataclasses.field(default_factory=dict)
+    # model -> simulated $ for the run, INCLUDING untrafficked warm pools
+
+    @property
+    def total_cost_usd(self) -> float:
+        """Simulated fleet dollars (price-sheet output, DESIGN.md S1)."""
+        return float(sum(self.costs.values()))
 
     def per_class(self) -> dict:
         """Fleet-wide per-SLO-class stats (latencies pooled across models)."""
@@ -352,6 +481,8 @@ class GatewayResult:
         out = {"makespan_s": round(self.makespan_s, 4),
                "cold_starts": dict(self.cold_starts),
                "models": {m: r.summary() for m, r in self.per_model.items()}}
+        if self.costs:
+            out["sim_cost_usd"] = round(self.total_cost_usd, 6)
         pc = self.per_class()
         if pc:
             out["per_class"] = pc
@@ -361,66 +492,93 @@ class GatewayResult:
 # -- the router --------------------------------------------------------------
 
 class Gateway:
-    """Routes a mixed multi-model workload to per-model replica pools.
+    """Routes a mixed multi-model workload to per-model, per-cloud replica
+    pools by split weight.
 
     capacity: optional {cloud_name: max_total_replicas} shared across every
-    deployment placed on that cloud -- the knob the placement planner
+    pool placed on that cloud -- the knob the placement planner
     (placement.py) sizes against.  The cap bounds ELASTIC scale-up
     (over-budget requests are denied and logged gateway:scale_denied);
-    run() rejects a configuration whose baseline min_replicas pools
+    run() rejects a configuration whose baseline min_replicas floors
     already exceed it, and a scale-from-zero launch that would otherwise
     starve forever proceeds over budget with a gateway:capacity_exceeded
     event (the K8s analog: the pod pends, then preempts -- we choose
     serve-and-log so the simulation always completes).
 
+    replan: optional ReplanConfig enabling continuous mid-run re-planning
+    (periodic probes that shift split weights; see ReplanConfig).
+
     record_batches=True keeps a per-batch audit trail (batch_log) and a
     per-cloud usage trace (usage_trace) for the invariant test suite.
+    After run(), ``final_weights`` holds each model's normalized live
+    split for inspection.
     """
 
     def __init__(self, *, capacity: Optional[dict] = None,
                  log: Optional[EventLog] = None,
+                 replan: Optional[ReplanConfig] = None,
                  record_batches: bool = False):
         self.deployments: dict[str, Deployment] = {}
         self.capacity = dict(capacity or {})
         self.log = log or EventLog()
+        self.replan = replan
         self.record_batches = record_batches
         self.batch_log: list = []        # dicts, one per dispatched batch
         self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
+        self.final_weights: dict = {}    # model -> {cloud: weight} post-run
 
-    def deploy(self, name: str, backend, profile: CloudProfile, *,
-               autoscaler=None, max_batch: int = 32,
-               canary=None, canary_fraction: float = 0.0,
+    def deploy(self, name: str, backend, profile: Optional[CloudProfile] = None,
+               *, split: Optional[dict] = None, autoscaler=None,
+               max_batch: int = 32, canary=None, canary_fraction: float = 0.0,
                standby: Optional[CloudProfile] = None) -> Deployment:
+        """``profile`` places the model on one cloud (weight 1.0);
+        ``split={CloudProfile: weight}`` places it active-active (weights
+        must sum to 1).  With both, ``profile`` names the primary among the
+        split clouds; with only a split, the largest weight is primary.
+        ``standby`` adds a zero-weight pool that failover shifts into."""
         if isinstance(autoscaler, AutoscalerConfig):
             autoscaler = Autoscaler(autoscaler)
-        if standby is not None and standby.name == profile.name:
-            raise ValueError("standby must be a different cloud")
+        if split:
+            placements = [(p, float(w)) for p, w in split.items()]
+            names = [p.name for p, _ in placements]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate clouds in split: {names}")
+            if any(w < 0 for _, w in placements):
+                raise ValueError("split weights must be >= 0")
+            total = sum(w for _, w in placements)
+            if abs(total - 1.0) > 1e-6:
+                raise ValueError(f"split weights must sum to 1, got {total}")
+            if profile is None:
+                profile = max(placements, key=lambda pw: pw[1])[0]
+            elif profile.name not in names:
+                raise ValueError("profile must be one of the split clouds")
+        elif profile is not None:
+            placements = [(profile, 1.0)]
+        else:
+            raise ValueError("deploy needs a profile or a split")
+        if standby is not None:
+            if standby.name in [p.name for p, _ in placements]:
+                raise ValueError("standby must be a different cloud")
+            placements.append((standby, 0.0))
         dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
-                         max_batch, canary, canary_fraction, standby)
+                         max_batch, canary, canary_fraction, standby,
+                         placements)
         self.deployments[name] = dep
         return dep
 
     # -- discrete-event loop ------------------------------------------------
     def run(self, traffic: list, seed: int = 0,
-            failures: Optional[list] = None) -> GatewayResult:
+            failures: Optional[list] = None,
+            migrations: Optional[list] = None) -> GatewayResult:
         self.batch_log = []              # audit trails cover ONE run
         self.usage_trace = []
+        self.final_weights = {}
         rng = np.random.default_rng(seed)
         by_model: dict[str, list] = {}
         for spec in traffic:
             if spec.model not in self.deployments:
                 raise KeyError(f"no deployment named {spec.model!r}")
             by_model.setdefault(spec.model, []).append(spec)
-
-        base: dict[str, int] = {}        # cloud -> baseline min_replicas,
-        for dep in self.deployments.values():   # over EVERY deployment: an
-            base[dep.profile.name] = (base.get(dep.profile.name, 0)  # idle
-                                      + dep.autoscaler.cfg.min_replicas)
-        for cloud, n in base.items():    # pool still holds cloud capacity
-            cap = self.capacity.get(cloud)
-            if cap is not None and n > cap:
-                raise ValueError(
-                    f"min_replicas on {cloud!r} total {n} > capacity {cap}")
 
         events: list = []                # (t, seq, kind, model, payload)
         seq = itertools.count()
@@ -440,126 +598,171 @@ class Gateway:
             ver = np.zeros(len(arr), int)
             if dep.canary is not None and dep.canary_fraction > 0:
                 ver = (rng.random(len(arr)) < dep.canary_fraction).astype(int)
-            s = st[m] = _ModelState(dep, arr, ver, cls)
-            for _ in range(dep.autoscaler.cfg.min_replicas):
-                s.replicas[s.next_rid] = _Replica(s.next_rid, warm=True)
-                s.next_rid += 1
-            s.trace.append((0.0, len(s.replicas)))
+            route_u = rng.random(len(arr))
+            s = st[m] = _ModelState(dep, arr, ver, cls, route_u)
+            floors = _apportion(dep.autoscaler.cfg.min_replicas,
+                                {c: p.weight for c, p in s.pools.items()})
+            for c, pool in s.pools.items():
+                pool.floor = floors[c]
+                for _ in range(pool.floor):
+                    pool.replicas[s.next_rid] = _Replica(
+                        s.next_rid, warm=True)
+                    s.next_rid += 1
+            s.trace.append((0.0, s.total_pool()))
+            s.deadline_base = (dep.profile.network_rtt_s
+                               + dep.profile.lb_overhead_s
+                               + dep.backend.service_time(1))
             for i, t in enumerate(arr):
                 heapq.heappush(events, (float(t), next(seq), "arr", m, i))
+
+        base: dict[str, int] = {}        # cloud -> baseline floors, over
+        for s in st.values():            # EVERY deployment: an idle pool
+            for c, pool in s.pools.items():   # still holds cloud capacity
+                base[c] = base.get(c, 0) + pool.floor
+        for cloud, n in base.items():
+            cap = self.capacity.get(cloud)
+            if cap is not None and n > cap:
+                raise ValueError(
+                    f"min_replicas on {cloud!r} total {n} > capacity {cap}")
+
         for f in failures or []:
             heapq.heappush(events, (float(f.at_s), next(seq),
                                     "fail", "", f.cloud))
             heapq.heappush(events, (float(f.at_s + f.duration_s), next(seq),
                                     "recover", "", f.cloud))
+        for mig in migrations or []:
+            heapq.heappush(events, (float(mig.at_s), next(seq),
+                                    "replan", "", mig))
+        if self.replan is not None:
+            heapq.heappush(events, (float(self.replan.check_every_s),
+                                    next(seq), "probe", "", None))
 
         with self.log.stage("gateway:run", models=sorted(by_model),
                             n=int(sum(len(x.arr) for x in st.values()))):
             while events:
                 t = events[0][0]
                 touched, idle_checks = set(), []
+                probe_due = False
                 # apply every state change at time t before dispatching so a
                 # burst admits as full batches (pre-gateway sim semantics);
-                # idle expiries run last so a coincident arrival wins the
-                # replica instead of forcing a retire + cold start
+                # probes run after dispatch (leftover queues are real
+                # pressure); idle expiries run last so a coincident arrival
+                # wins the replica instead of forcing a retire + cold start
                 while events and events[0][0] == t:
                     _, _, kind, m, data = heapq.heappop(events)
                     if kind == "fail":
                         down[data] = down.get(data, 0) + 1
                         if down[data] == 1:
-                            for name, x in st.items():
-                                if x.active.name == data:
-                                    self._migrate(x, t, events, seq, st, down,
-                                                  reason="fail")
-                                    touched.add(name)
+                            touched |= self._outage_edge(
+                                st, t, down, events, seq, reason="fail",
+                                cloud=data)
                         continue
                     if kind == "recover":
                         down[data] -= 1
                         if down[data] == 0:
                             del down[data]
-                            for name, x in st.items():
-                                if (x.dep.profile.name == data
-                                        and x.active.name != data):
-                                    self._migrate(x, t, events, seq, st, down,
-                                                  reason="recover")
-                                    touched.add(name)
-                                elif x.active.name == data:
-                                    # pool drained in place (no standby):
-                                    # relaunch COLD -- the outage destroyed
-                                    # the pods, whatever cold_scale_up says
-                                    self._migrate(x, t, events, seq, st, down,
-                                                  reason="recover")
-                                    touched.add(name)
-                                elif (x.active.name in down and x.dep.standby
-                                      and x.dep.standby.name == data):
-                                    # primary still down, standby back up:
-                                    # delayed failover
-                                    self._migrate(x, t, events, seq, st, down,
-                                                  reason="fail")
-                                    touched.add(name)
+                            touched |= self._outage_edge(
+                                st, t, down, events, seq, reason="recover",
+                                cloud=data)
+                        continue
+                    if kind == "replan":
+                        touched |= self._apply_migration(
+                            st, t, data.plan, events, seq, down)
+                        continue
+                    if kind == "probe":
+                        probe_due = True
                         continue
                     s = st[m]
                     if kind == "arr":
+                        pool = self._route(s, data)
                         key = (int(s.ver[data]), s.cls[data].name)
-                        s.pending.setdefault(key, []).append(data)
+                        pool.pending.setdefault(key, []).append(data)
                         touched.add(m)
                     elif kind == "up":
-                        gen, forced_cold = data
-                        if gen != s.generation:
-                            continue     # scheduled before a failover drain
-                        s.scheduled_up -= 1
+                        cloud, gen, forced_cold = data
+                        pool = s.pools[cloud]
+                        if gen != pool.generation:
+                            continue     # scheduled before a drain
+                        pool.scheduled_up -= 1
                         warm = (not s.dep.autoscaler.cfg.cold_scale_up
                                 and not forced_cold)
-                        s.replicas[s.next_rid] = _Replica(
-                            s.next_rid, warm=warm, last_active=t)
+                        pool.replicas[s.next_rid] = _Replica(
+                            s.next_rid, warm=warm, last_active=t, created_s=t)
                         if s.dep.autoscaler.tracks_idle:
                             # a replica that joins after the queue drained
                             # would otherwise never get an idle check
                             heapq.heappush(events, (
                                 t + s.dep.autoscaler.cfg.idle_window_s,
-                                next(seq), "idle", m, (s.next_rid, t)))
+                                next(seq), "idle", m, (cloud, s.next_rid, t)))
                         s.next_rid += 1
                         touched.add(m)
                     elif kind == "free":
-                        rid, epoch = data
-                        r = s.replicas.get(rid)
+                        cloud, rid, epoch = data
+                        pool = s.pools[cloud]
+                        r = pool.replicas.get(rid)
                         if r is not None and r.epoch == epoch:
                             r.busy = False
                             r.inflight = None
                             r.last_active = t
-                            if s.dep.autoscaler.tracks_idle:
+                            if pool.weight <= 0 and pool.queue_len() == 0:
+                                # drained-away pool: the last in-flight batch
+                                # just finished, release the replica now
+                                self._retire(s, pool, r, t, st)
+                            elif s.dep.autoscaler.tracks_idle:
                                 heapq.heappush(events, (
                                     t + s.dep.autoscaler.cfg.idle_window_s,
-                                    next(seq), "idle", m, (rid, t)))
+                                    next(seq), "idle", m, (cloud, rid, t)))
                             touched.add(m)
                     else:                # "idle"
                         idle_checks.append((m, data))
-                for m in touched:
+                # sorted: set order depends on PYTHONHASHSEED, and which
+                # model dispatches first decides shared-capacity races --
+                # invariant 4 promises cross-process determinism
+                for m in sorted(touched):
                     self._dispatch(st[m], t, events, seq)
                     self._autoscale(st[m], t, events, seq, st, down)
+                if probe_due:
+                    for m in sorted(self._probe(st, t, events, seq, down)):
+                        self._dispatch(st[m], t, events, seq)
+                        self._autoscale(st[m], t, events, seq, st, down)
+                    if events or self._work_left(st):
+                        heapq.heappush(
+                            events, (t + self.replan.check_every_s,
+                                     next(seq), "probe", "", None))
                 for m, payload in idle_checks:
                     self._maybe_retire(st[m], t, payload, st)
 
-        results, cold, makespan = {}, {}, 0.0
+        results, cold, costs, makespan = {}, {}, {}, 0.0
+        totals: dict[str, float] = {}
         for m, s in st.items():
             if not len(s.arr):           # deployed but untrafficked: holds
                 continue                 # capacity, reports no results
             if s.served < len(s.arr):
                 raise RuntimeError(
                     f"gateway stalled: {m} served {s.served}/{len(s.arr)}")
-            total = max((float(s.arr[i] + s.lat[i]) for i in range(len(s.arr))),
-                        default=0.0)
-            makespan = max(makespan, total)
-            results[m] = self._result(s, total)
-            cold[m] = s.cold_starts
-        return GatewayResult(results, cold, makespan)
+            totals[m] = max((float(s.arr[i] + s.lat[i])
+                             for i in range(len(s.arr))), default=0.0)
+            makespan = max(makespan, totals[m])
+        for m, s in st.items():
+            # bill surviving replicas to the fleet's last completion, NOT
+            # to t_end: a trailing recover window or probe event on an
+            # unrelated cloud must not inflate the bill (replicas retired
+            # after the makespan already billed their real idle-out time)
+            for pool in s.pools.values():
+                for r in pool.replicas.values():
+                    pool.replica_seconds += max(makespan - r.created_s, 0.0)
+            costs[m] = sum(self._pool_costs(s).values())
+            self.final_weights[m] = self._norm_weights(s)
+            if m in totals:
+                results[m] = self._result(s, totals[m])
+                cold[m] = s.cold_starts
+        return GatewayResult(results, cold, makespan, costs)
 
     def _result(self, s: _ModelState, total: float) -> ServeResult:
         dep = s.dep
         # deadline base: the warm single-request path on the PRIMARY cloud
         # (failover cold starts count against the same promise)
-        base = (dep.profile.network_rtt_s + dep.profile.lb_overhead_s
-                + dep.backend.service_time(1))
+        base = s.deadline_base
         cls_lats: dict[str, list] = {}
         cls_miss: dict[str, int] = {}
         for i in range(len(s.arr)):
@@ -578,39 +781,81 @@ class Gateway:
                         rate_rps=round(observed["rate_rps"], 4),
                         service_time_s=round(observed["service_time_s"], 8),
                         n=n)
+        cost_by_cloud = self._pool_costs(s)
         return ServeResult(f"gateway:{dep.name}", n, total, s.lat.tolist(),
                            s.trace, per_version=s.per_version,
                            class_latencies=cls_lats, class_misses=cls_miss,
-                           observed=observed)
+                           observed=observed,
+                           cost_usd=sum(cost_by_cloud.values()),
+                           cost_by_cloud=cost_by_cloud)
+
+    @staticmethod
+    def _pool_costs(s: _ModelState) -> dict:
+        """Simulated dollars per cloud: provisioned replica-seconds priced
+        by the profile sheet.  The ONE formula behind both
+        GatewayResult.costs and ServeResult.cost_by_cloud."""
+        return {c: p.replica_seconds * p.profile.cost_per_s
+                for c, p in s.pools.items() if p.replica_seconds > 0}
+
+    # -- split routing ------------------------------------------------------
+    @staticmethod
+    def _norm_weights(s: _ModelState) -> dict:
+        total = sum(p.weight for p in s.pools.values())
+        if total <= 0:
+            return {c: 0.0 for c in s.pools}
+        return {c: p.weight / total for c, p in s.pools.items()}
+
+    def _route(self, s: _ModelState, i: int) -> _Pool:
+        """Deterministic weighted choice: the request's pre-drawn uniform
+        against the LIVE weights (declared pool order).  With every weight
+        at zero (full outage, no standby) requests wait on the primary."""
+        live = [(c, p) for c, p in s.pools.items() if p.weight > 0]
+        total = sum(p.weight for _, p in live)
+        if total <= 0:
+            return s.pools[s.dep.profile.name]
+        u = float(s.route_u[i]) * total
+        acc = 0.0
+        for c, p in live:
+            acc += p.weight
+            if u < acc:
+                return p
+        return live[-1][1]
 
     # -- dispatch -----------------------------------------------------------
-    def _best_queue(self, s: _ModelState, keys: list, t: float) -> tuple:
+    def _best_queue(self, s: _ModelState, pool: _Pool, keys: list,
+                    t: float) -> tuple:
         """Class-weighted age: serve the queue maximizing weight * age of
         its oldest request; ties fall to weight then earliest arrival."""
         def rank(k):
-            q = s.pending[k]
+            q = pool.pending[k]
             w = s.slo_by_name[k[1]].weight
             return (w * (t - float(s.arr[q[0]])), w, -q[0])
         return max(keys, key=rank)
 
     def _dispatch(self, s: _ModelState, t: float, events, seq) -> None:
+        for pool in s.pools.values():
+            if pool.queue_len():
+                self._dispatch_pool(s, pool, t, events, seq)
+
+    def _dispatch_pool(self, s: _ModelState, pool: _Pool, t: float,
+                       events, seq) -> None:
         while True:
-            keys = [k for k, q in s.pending.items() if q]
+            keys = [k for k, q in pool.pending.items() if q]
             if not keys:
                 return
-            idle = [r for r in s.replicas.values() if not r.busy]
+            idle = [r for r in pool.replicas.values() if not r.busy]
             if idle:
-                key = self._best_queue(s, keys, t)
+                key = self._best_queue(s, pool, keys, t)
                 r = min(idle, key=lambda x: x.rid)
             else:
                 pkeys = [k for k in keys if s.slo_by_name[k[1]].preempts]
                 if not pkeys:
                     return
-                key = self._best_queue(s, pkeys, t)
+                key = self._best_queue(s, pool, pkeys, t)
                 w = s.slo_by_name[key[1]].weight
                 # strict weight order prevents preemption livelock (a class
                 # can never evict work of its own or a higher class)
-                victims = [r for r in s.replicas.values()
+                victims = [r for r in pool.replicas.values()
                            if r.busy and r.inflight is not None
                            and r.inflight["slo"].preemptible
                            and r.inflight["slo"].weight < w]
@@ -618,32 +863,35 @@ class Gateway:
                     return
                 # evict the batch with the most remaining work (least sunk)
                 r = max(victims, key=lambda x: (x.inflight["done"], x.rid))
-                n_back = self._reclaim(s, r, t)
+                n_back = self._reclaim(s, pool, r, t)
                 self.log.record("gateway:preempt", 0.0, model=s.dep.name,
                                 t_sim=round(t, 6), rid=r.rid, requeued=n_back,
-                                by=key[1])
-            self._assign(s, r, key, t, events, seq)
+                                by=key[1], cloud=pool.profile.name)
+            self._assign(s, pool, r, key, t, events, seq)
 
-    def _assign(self, s: _ModelState, r: _Replica, key: tuple, t: float,
-                events, seq) -> None:
+    def _assign(self, s: _ModelState, pool: _Pool, r: _Replica, key: tuple,
+                t: float, events, seq) -> None:
         dep = s.dep
         v, cname = key
-        take = s.pending[key][:dep.max_batch]
-        s.pending[key] = s.pending[key][len(take):]
+        take = pool.pending[key][:dep.max_batch]
+        pool.pending[key] = pool.pending[key][len(take):]
         cold = 0.0
         if not r.warm:
-            cold = s.active.model_load_s
+            cold = pool.profile.model_load_s
             r.warm = True
             s.cold_starts += 1
             self.log.record("gateway:cold_start", cold, model=dep.name,
-                            cloud=s.active.name, t_sim=round(t, 6))
+                            cloud=pool.profile.name, t_sim=round(t, 6))
         backend = dep.backends[v]
         b = len(take)
         svc = backend.service_time(b)
-        done = (t + s.active.network_rtt_s + s.active.lb_overhead_s
+        done = (t + pool.profile.network_rtt_s + pool.profile.lb_overhead_s
                 + cold + svc)
         for i in take:
             s.lat[i] = done - s.arr[i]
+            if s.lat[i] > s.cls[i].deadline_mult * s.deadline_base:
+                s.win_miss += 1
+        s.win_n += b
         s.served += b
         s.busy_s += svc
         s.per_version[backend.name] = s.per_version.get(backend.name, 0) + b
@@ -652,17 +900,20 @@ class Gateway:
         r.epoch += 1
         rec = None
         if self.record_batches:
-            rec = {"model": dep.name, "rid": r.rid, "cloud": s.active.name,
+            rec = {"model": dep.name, "rid": r.rid,
+                   "cloud": pool.profile.name,
                    "cls": cname, "version": v, "idx": tuple(take),
                    "start_s": t, "end_s": done, "preempted": False}
             self.batch_log.append(rec)
         r.inflight = {"idx": take, "v": v, "cls": cname,
                       "slo": s.slo_by_name[cname], "backend": backend.name,
-                      "service_s": svc, "done": done, "record": rec}
+                      "service_s": svc, "done": done, "record": rec,
+                      "win_epoch": s.win_epoch}
         heapq.heappush(events, (done, next(seq), "free", dep.name,
-                                (r.rid, r.epoch)))
+                                (pool.profile.name, r.rid, r.epoch)))
 
-    def _reclaim(self, s: _ModelState, r: _Replica, t: float) -> int:
+    def _reclaim(self, s: _ModelState, pool: _Pool, r: _Replica,
+                 t: float) -> int:
         """Undo an in-flight batch (preemption or cloud failure): requests
         re-queue with their original arrival times, so they complete exactly
         once when re-dispatched.  Request index order IS arrival order
@@ -672,9 +923,18 @@ class Gateway:
         fl = r.inflight
         take = fl["idx"]
         key = (fl["v"], fl["cls"])
-        s.pending[key] = sorted(take + s.pending.get(key, []))
+        pool.pending[key] = sorted(take + pool.pending.get(key, []))
+        # only undo window counts the batch contributed to the CURRENT
+        # probe window; a pre-reset batch was already flushed with its
+        # window and must not distort this one
+        undo_window = fl["win_epoch"] == s.win_epoch
         for i in take:
+            if undo_window and s.lat[i] > s.cls[i].deadline_mult \
+                    * s.deadline_base:
+                s.win_miss -= 1
             s.lat[i] = -1.0
+        if undo_window:
+            s.win_n -= len(take)
         s.served -= len(take)
         s.busy_s -= fl["service_s"]
         s.per_version[fl["backend"]] -= len(take)
@@ -687,68 +947,387 @@ class Gateway:
         r.last_active = t
         return len(take)
 
-    # -- failover -----------------------------------------------------------
-    def _migrate(self, s: _ModelState, t: float, events, seq, st, down, *,
-                 reason: str) -> None:
-        """Drain a pool off its current cloud and restart it on the target
-        (standby on failure, primary on recovery).  In-flight work re-queues
-        -- pod identity is not portable across clouds -- and every restarted
-        replica is cold: it pays the control-plane delay plus the target
-        profile's model_load_s on its first batch."""
-        dep = s.dep
-        pool_before = s.pool
-        requeued = 0
-        for r in list(s.replicas.values()):
-            if r.busy and r.inflight is not None:
-                requeued += self._reclaim(s, r, t)
-        s.replicas.clear()
-        s.generation += 1                # stale "up" events are dropped
-        s.scheduled_up = 0
-        s.trace.append((t, 0))
-        if self.record_batches:
-            self.usage_trace.append((t, s.active.name,
-                                     self._cloud_usage(st, s.active.name)))
-        src = s.active.name
-        if reason == "recover":
-            target = dep.profile
+    # -- weight shifts: migration, failover, recovery -----------------------
+    def _desired_weights(self, s: _ModelState, down: dict) -> dict:
+        """Nominal weights with down clouds zeroed; if that extinguishes
+        every pool, the zero-nominal pools that are still up (the standby)
+        split the traffic evenly."""
+        live = {c: p.nominal for c, p in s.pools.items()
+                if p.nominal > 0 and c not in down}
+        if not live:
+            alts = [c for c, p in s.pools.items()
+                    if p.nominal <= 0 and c not in down]
+            live = {c: 1.0 / len(alts) for c in alts}
+        return {c: live.get(c, 0.0) for c in s.pools}
+
+    def _outage_edge(self, st, t, down, events, seq, *, reason: str,
+                     cloud: str) -> set:
+        """A cloud just died or came back: every model re-derives its live
+        weights from the nominal split and the down set.  The edge is a
+        plain weight shift -- failover/recovery have no code path of their
+        own."""
+        touched = set()
+        for name, s in st.items():
+            desired = self._desired_weights(s, down)
+            changed = any(abs(desired[c] - p.weight) > 1e-12
+                          for c, p in s.pools.items())
+            dead = s.pools.get(cloud)
+            must_drain = (reason == "fail" and dead is not None
+                          and (dead.replicas or dead.scheduled_up))
+            if not changed and not must_drain:
+                continue
+            if reason == "recover":
+                home = cloud in s.pools and s.pools[cloud].nominal > 0
+                why = "recover" if home else "fail"
+            else:
+                why = "fail"
+            self._set_weights(s, t, desired, reason=why, events=events,
+                              seq=seq, st=st, down=down,
+                              edge_cloud=cloud if reason == "fail" else None)
+            touched.add(name)
+        return touched
+
+    def _apply_migration(self, st, t, plan, events, seq, down) -> set:
+        """Apply a MigrationPlan (or raw {model: {cloud: weight}}) live:
+        one weight shift per step, opening pools for clouds the deployment
+        has not served from before (gateway:migrate reason=plan)."""
+        if hasattr(plan, "steps"):
+            steps = list(plan.steps)
         else:
-            target = (dep.standby if s.active.name == dep.profile.name
-                      else dep.profile)
-        if target is not None and target.name in down:
-            target = None                # nowhere to go: drain and wait
-        event = "gateway:failover" if reason == "fail" else "gateway:recover"
-        self.log.record(event, 0.0, model=dep.name, src=src,
-                        dst=target.name if target else None,
-                        t_sim=round(t, 6), requeued=requeued)
-        if target is None:
-            return
-        s.active = target
-        n = dep.autoscaler.relaunch_pool(pool_before, s.queue_len())
-        for i in range(n):
-            self._launch(s, t, events, seq, st, down,
-                         from_zero=(i == 0 and s.queue_len() > 0),
-                         forced_cold=True)
+            # normalize the raw-dict form into MigrationSteps so BOTH entry
+            # points share one validation rule set (weights sum to 1,
+            # non-negative, profiles cover every cloud)
+            steps = []
+            for model, weights in plan.items():
+                if model not in st:
+                    raise KeyError(f"no deployment named {model!r}")
+                pools = st[model].pools
+                steps.append(MigrationStep(
+                    model, dict(weights), {},
+                    {c: (pools[c].profile if c in pools else get_profile(c))
+                     for c in weights}))
+        touched = set()
+        for step in steps:
+            if step.model not in st:
+                raise KeyError(f"no deployment named {step.model!r}")
+            s = st[step.model]
+            for cloud in step.weights:
+                if cloud not in s.pools:
+                    s.pools[cloud] = _Pool(step.profiles[cloud], 0.0)
+            self.log.record("gateway:migrate", 0.0, model=step.model,
+                            t_sim=round(t, 6), reason="plan",
+                            weights={c: round(w, 6)
+                                     for c, w in step.weights.items()})
+            self._set_weights(s, t, dict(step.weights), reason="migrate",
+                              events=events, seq=seq, st=st, down=down,
+                              update_nominal=True,
+                              size_hint=dict(step.replicas) or None)
+            touched.add(step.model)
+        return touched
+
+    def _set_weights(self, s: _ModelState, t: float, target: dict, *,
+                     reason: str, events, seq, st, down,
+                     update_nominal: bool = False,
+                     size_hint: Optional[dict] = None,
+                     edge_cloud: Optional[str] = None) -> None:
+        """THE weight-shift primitive (drain-and-shift, exactly-once).
+
+        - dead-cloud pools drain hard: in-flight batches reclaim (pods are
+          gone), replicas clear, pending launches invalidate;
+        - pools migrated to zero weight on a LIVE cloud drain soft: idle
+          replicas retire now, busy ones finish their batch and retire on
+          its "free" (no work is dropped);
+        - every queued request re-routes by the NEW weights via its
+          original uniform draw, merged in arrival order;
+        - pools gaining weight from zero relaunch forced-cold, sized by
+          Autoscaler.relaunch_pool against the DESTINATION cloud's
+          headroom (the working set that left the shrinking pools, or the
+          MigrationPlan's replica hint).
+        """
+        dep = s.dep
+        old_live = {c: p.weight for c, p in s.pools.items()}
+        old_size = {c: p.size() for c, p in s.pools.items()}
+        for c, pool in s.pools.items():
+            w = float(target.get(c, 0.0))
+            if update_nominal:
+                pool.nominal = w
+            pool.weight = 0.0 if c in down else w
+        floors = _apportion(dep.autoscaler.cfg.min_replicas,
+                            {c: p.weight for c, p in s.pools.items()})
+        requeued = 0
+        moved = 0
+        for c, pool in s.pools.items():
+            pool.floor = floors[c]
+            if c in down and (pool.replicas or pool.scheduled_up):
+                for r in list(pool.replicas.values()):
+                    if r.busy and r.inflight is not None:
+                        requeued += self._reclaim(s, pool, r, t)
+                moved += old_size[c]
+                for r in pool.replicas.values():
+                    pool.replica_seconds += max(t - r.created_s, 0.0)
+                pool.replicas.clear()
+                pool.generation += 1     # stale "up" events are dropped
+                pool.scheduled_up = 0
+                s.trace.append((t, s.total_pool()))
+                self._note_usage(st, c, t)
+            elif (pool.weight <= 0 and old_live[c] > 0
+                  and (pool.replicas or pool.scheduled_up)):
+                moved += old_size[c]
+                pool.generation += 1
+                pool.scheduled_up = 0
+                for r in [x for x in pool.replicas.values() if not x.busy]:
+                    self._retire(s, pool, r, t, st)
+        # shift the backlog: re-route every queued request by the new split
+        pend = []
+        for pool in s.pools.values():
+            for q in pool.pending.values():
+                pend.extend(q)
+            pool.pending = {}
+        for i in sorted(pend):
+            pool = self._route(s, i)
+            key = (int(s.ver[i]), s.cls[i].name)
+            pool.pending.setdefault(key, []).append(i)
+        # relaunch on pools that just came alive
+        gainers = [(c, p) for c, p in s.pools.items()
+                   if p.weight > 0 and old_live.get(c, 0.0) <= 0
+                   and p.size() == 0 and c not in down]
+        wsum = sum(p.weight for _, p in gainers) or 1.0
+        for c, pool in gainers:
+            if size_hint is not None and c in size_hint:
+                share = int(size_hint[c])
+            else:
+                share = int(round(moved * pool.weight / wsum))
+            # surge headroom: the shrinking pools are still finishing their
+            # in-flight batches, so the deployment-total bound must not
+            # count them against the destination (they retire right after)
+            n = dep.autoscaler.relaunch_pool(
+                share, pool.queue_len(),
+                self._pool_headroom(st, s, pool, assume_live=True))
+            for i in range(n):
+                self._launch(s, pool, t, events, seq, st, down,
+                             from_zero=(i == 0 and pool.queue_len() > 0),
+                             forced_cold=True)
+        norm = self._norm_weights(s)
+        self.log.record("gateway:split", 0.0, model=dep.name,
+                        t_sim=round(t, 6), reason=reason, requeued=requeued,
+                        weights={c: round(w, 6) for c, w in norm.items()})
+        if reason in ("fail", "recover"):
+            # src/dst compare NORMALIZED shares: src is the cloud that LOST
+            # traffic share (the failed cloud on an outage, the absorber on
+            # recovery), dst the largest gainer -- a surviving split pool
+            # that absorbs a dead cloud's traffic by renormalization is a
+            # real destination; dst=None means nowhere to go at all
+            old_total = sum(old_live.values())
+            old_norm = {c: (w / old_total if old_total > 0 else 0.0)
+                        for c, w in old_live.items()}
+            losses = {c: old_norm[c] - norm[c] for c in s.pools
+                      if old_norm[c] - norm[c] > 1e-12}
+            gains = {c: norm[c] - old_norm[c] for c in s.pools
+                     if norm[c] - old_norm[c] > 1e-12}
+            # no share moved but something drained (e.g. a dead cloud's
+            # lingering soft-drain replicas): attribute the edge's cloud,
+            # not the primary
+            src = (max(losses, key=losses.get) if losses
+                   else edge_cloud or dep.profile.name)
+            dst = max(gains, key=gains.get) if gains else None
+            event = ("gateway:failover" if reason == "fail"
+                     else "gateway:recover")
+            self.log.record(event, 0.0, model=dep.name, src=src, dst=dst,
+                            t_sim=round(t, 6), requeued=requeued)
+
+    # -- continuous re-planning (probes) ------------------------------------
+    def _work_left(self, st) -> bool:
+        return any(p.queue_len() or p.scheduled_up
+                   or any(r.busy for r in p.replicas.values())
+                   for s in st.values() for p in s.pools.values())
+
+    def _pool_overloaded(self, s: _ModelState, pool: _Pool) -> bool:
+        """ReplanConfig overload rule, shared by the blocked detection and
+        the destination filter so the two can never drift apart."""
+        cfg = self.replan
+        return pool.queue_len() > (cfg.overload_factor
+                                   * s.dep.autoscaler.cfg.target_queue
+                                   * max(pool.size(), 1))
+
+    def _probe(self, st, t, events, seq, down) -> set:
+        """One auto-replan check over every model (ReplanConfig)."""
+        cfg = self.replan
+        touched = set()
+        for m, s in st.items():
+            # during an outage the live weights are a temporary emergency
+            # adjustment: probe shifts then stay live-only, so recovery
+            # still restores the DECLARED (nominal) split
+            update_nominal = not any(c in down for c in s.pools)
+            live = [(c, p) for c, p in s.pools.items() if p.weight > 0]
+            if not live:
+                s.streak["hot"] = s.streak["cold"] = 0
+                s.win_n = s.win_miss = 0
+                s.win_epoch += 1
+                continue
+            asc = s.dep.autoscaler
+            blocked = [
+                (c, p) for c, p in live
+                if self._pool_overloaded(s, p)
+                and self._pool_headroom(st, s, p, down) <= 0]
+            miss = (s.win_n >= cfg.min_window_n
+                    and s.win_miss / s.win_n > cfg.max_miss_rate)
+            # the window is consumed by THIS probe whatever it decides --
+            # an aborted shift (no destination) must not leak completions
+            # into the next window
+            s.win_n = s.win_miss = 0
+            s.win_epoch += 1
+            if blocked or miss:
+                s.streak["hot"] += 1
+                s.streak["cold"] = 0
+                # remember what ARMED the trigger: the firing probe's own
+                # flags may differ from what built the streak
+                s.streak_why = "overload" if blocked else "miss_rate"
+            else:
+                s.streak["hot"] = 0
+                idle_split = (cfg.consolidate and len(live) > 1
+                              and s.queue_len() == 0
+                              and not any(r.busy
+                                          for _, p in live
+                                          for r in p.replicas.values()))
+                s.streak["cold"] = s.streak["cold"] + 1 if idle_split else 0
+            if s.streak["hot"] >= cfg.sustain:
+                # hottest pool sheds toward the cheapest cloud with headroom
+                src_c, src_p = max(live, key=lambda cp: (
+                    cp[1].queue_len() / max(cp[1].size(), 1),
+                    cp[1].profile.cost_per_s, cp[0]))
+                views = []
+                for c, p in s.pools.items():
+                    if c == src_c or c in down:
+                        continue
+                    if self._pool_overloaded(s, p):
+                        continue     # equally drowning: shifting there just
+                    views.append(    # ping-pongs the backlog, no relief
+                        PoolView(c, p.profile.cost_per_s, p.size(),
+                                 self._pool_headroom(st, s, p, down,
+                                                     assume_live=True)))
+                pick = asc.pick_scale_up(views)
+                if pick is None:
+                    continue     # streak stays armed: the first probe after
+                                 # a destination frees up shifts immediately
+                s.streak["hot"] = 0
+                delta = cfg.shift * src_p.weight
+                target = {c: p.weight for c, p in s.pools.items()}
+                target[src_c] -= delta
+                target[pick.cloud] += delta
+                self.log.record("gateway:migrate", 0.0, model=m,
+                                t_sim=round(t, 6), src=src_c, dst=pick.cloud,
+                                delta=round(delta, 6), reason=s.streak_why)
+                self._set_weights(s, t, target, reason="migrate",
+                                  events=events, seq=seq, st=st, down=down,
+                                  update_nominal=update_nominal)
+                touched.add(m)
+            elif s.streak["cold"] >= cfg.sustain:
+                # idle fleet: fold the most expensive pool into the cheapest
+                src = asc.pick_retire(
+                    [PoolView(c, p.profile.cost_per_s, p.size(), 0)
+                     for c, p in live])
+                # real headroom, like the overload branch: never fold the
+                # whole split onto a cloud that cannot actually grow
+                others = [PoolView(c, p.profile.cost_per_s, p.size(),
+                                   self._pool_headroom(st, s, p, down,
+                                                       assume_live=True))
+                          for c, p in live if c != (src.cloud if src else None)]
+                dst = asc.pick_scale_up(others)
+                if src is None or dst is None:
+                    continue     # streak stays armed, same as the hot path
+                s.streak["cold"] = 0
+                target = {c: p.weight for c, p in s.pools.items()}
+                target[dst.cloud] += target[src.cloud]
+                target[src.cloud] = 0.0
+                self.log.record("gateway:migrate", 0.0, model=m,
+                                t_sim=round(t, 6), src=src.cloud,
+                                dst=dst.cloud,
+                                delta=round(target[dst.cloud], 6),
+                                reason="cost")
+                self._set_weights(s, t, target, reason="migrate",
+                                  events=events, seq=seq, st=st, down=down,
+                                  update_nominal=update_nominal)
+                touched.add(m)
+        return touched
 
     # -- scaling ------------------------------------------------------------
+    def _pool_cap(self, s: _ModelState, pool: _Pool) -> int:
+        """Max replicas this pool may hold: its ceil-share of max_replicas
+        by live weight (a pool holding ALL the traffic gets the whole
+        budget), never below its floor."""
+        total = sum(p.weight for p in s.pools.values())
+        if pool.weight <= 0 or total <= 0:
+            return pool.floor
+        cfg = s.dep.autoscaler.cfg
+        cap = max(cfg.max_replicas, cfg.min_replicas)
+        return max(math.ceil(cap * pool.weight / total), pool.floor)
+
+    def _pool_headroom(self, st, s: _ModelState, pool: _Pool,
+                       down: Optional[dict] = None,
+                       assume_live: bool = False) -> int:
+        """Replicas this pool can still add under its weight share, the
+        deployment budget, and the shared cloud capacity.  assume_live
+        asks "could this cloud absorb a weight shift?": it prices a
+        zero-weight pool as if it held traffic and skips the
+        deployment-total bound, because the source pool drains after the
+        shift (live migration runs a transient surge on purpose)."""
+        cloud = pool.profile.name
+        if down and cloud in down:
+            return 0
+        cfg = s.dep.autoscaler.cfg
+        budget = max(cfg.max_replicas, cfg.min_replicas)
+        if assume_live:
+            room = budget - pool.size()
+        elif pool.weight <= 0:
+            room = 0
+        else:
+            room = min(self._pool_cap(s, pool) - pool.size(),
+                       budget - s.total_pool())
+        cap = self.capacity.get(cloud)
+        if cap is not None:
+            room = min(room, cap - self._cloud_usage(st, cloud))
+        return max(room, 0)
+
     def _autoscale(self, s: _ModelState, t: float, events, seq, st,
                    down) -> None:
-        q = s.queue_len()
-        if q > 0 and s.pool == 0:        # scale from zero: spin up one
-            self._launch(s, t, events, seq, st, down, from_zero=True)
-            return
-        # at most ONE launch per evaluation (KPA rate-limits scale-up; also
-        # the pre-gateway sim's cadence of one replica per batch completion,
-        # which the legacy InferenceService path depends on)
-        if s.dep.autoscaler.scale_up_needed(q, s.pool):
-            self._launch(s, t, events, seq, st, down)
+        cfg = s.dep.autoscaler.cfg
+        budget = max(cfg.max_replicas, cfg.min_replicas)
+        for pool in s.pools.values():
+            q = pool.queue_len()
+            if q > 0 and pool.size() == 0:   # scale from zero: spin up one
+                if s.total_pool() >= budget:
+                    # queued work is pinned to THIS pool (routing moves only
+                    # on weight shifts), so starving it would stall the run:
+                    # breach the deployment budget loudly instead
+                    self.log.record("gateway:budget_exceeded", 0.0,
+                                    model=s.dep.name,
+                                    cloud=pool.profile.name,
+                                    t_sim=round(t, 6))
+                self._launch(s, pool, t, events, seq, st, down,
+                             from_zero=True)
+                continue
+            # at most ONE launch per pool per evaluation (KPA rate-limits
+            # scale-up; also the pre-gateway sim's cadence of one replica
+            # per batch completion, which the legacy kserve path depends
+            # on); per-pool ceil-share caps may SUM over the budget, so the
+            # deployment total is enforced here too
+            if (s.dep.autoscaler.scale_up_needed(q, pool.size())
+                    and pool.size() < self._pool_cap(s, pool)
+                    and s.total_pool() < budget):
+                self._launch(s, pool, t, events, seq, st, down)
 
     def _cloud_usage(self, st, cloud: str) -> int:
-        return sum(x.pool for x in st.values()
-                   if x.active.name == cloud)
+        return sum(p.size() for x in st.values()
+                   for c, p in x.pools.items() if c == cloud)
 
-    def _launch(self, s: _ModelState, t: float, events, seq, st, down, *,
-                from_zero: bool = False, forced_cold: bool = False) -> bool:
-        cloud = s.active.name
+    def _note_usage(self, st, cloud: str, t: float) -> None:
+        if self.record_batches:
+            self.usage_trace.append((t, cloud, self._cloud_usage(st, cloud)))
+
+    def _launch(self, s: _ModelState, pool: _Pool, t: float, events, seq,
+                st, down, *, from_zero: bool = False,
+                forced_cold: bool = False) -> bool:
+        cloud = pool.profile.name
         if cloud in down:                # nothing schedules on a dead cloud
             self.log.record("gateway:scale_denied", 0.0, model=s.dep.name,
                             cloud=cloud, t_sim=round(t, 6),
@@ -761,35 +1340,40 @@ class Gateway:
                                 cloud=cloud, t_sim=round(t, 6),
                                 reason="capacity")
                 return False
-            # a deployment at pool 0 would starve forever if every other
-            # pool on this cloud is warm-pinned: serve over budget, loudly
+            # a pool at size 0 would starve forever if every other pool on
+            # this cloud is warm-pinned: serve over budget, loudly
             self.log.record("gateway:capacity_exceeded", 0.0,
                             model=s.dep.name, cloud=cloud, t_sim=round(t, 6))
         delay = s.dep.autoscaler.cfg.scale_up_delay_s
-        s.scheduled_up += 1
-        s.trace.append((t, s.pool))
-        if self.record_batches:
-            self.usage_trace.append((t, cloud, self._cloud_usage(st, cloud)))
+        pool.scheduled_up += 1
+        s.trace.append((t, s.total_pool()))
+        self._note_usage(st, cloud, t)
         heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name,
-                                (s.generation, forced_cold)))
+                                (cloud, pool.generation, forced_cold)))
         self.log.record("gateway:scale_up", delay, model=s.dep.name,
-                        t_sim=round(t, 6), pool=s.pool, from_zero=from_zero)
+                        t_sim=round(t, 6), pool=s.total_pool(), cloud=cloud,
+                        from_zero=from_zero)
         return True
 
-    def _maybe_retire(self, s: _ModelState, t: float, payload, st) -> None:
-        rid, stamp = payload
-        r = s.replicas.get(rid)
-        if r is None or r.busy or r.last_active > stamp:
-            return                       # reused since the check was scheduled
-        if not s.dep.autoscaler.can_remove(s.pool):
-            return
-        del s.replicas[rid]
-        s.trace.append((t, s.pool))
-        if self.record_batches:
-            self.usage_trace.append((t, s.active.name,
-                                     self._cloud_usage(st, s.active.name)))
+    def _retire(self, s: _ModelState, pool: _Pool, r: _Replica, t: float,
+                st) -> None:
+        pool.replica_seconds += max(t - r.created_s, 0.0)
+        del pool.replicas[r.rid]
+        s.trace.append((t, s.total_pool()))
+        self._note_usage(st, pool.profile.name, t)
         self.log.record("gateway:scale_down", 0.0, model=s.dep.name,
-                        t_sim=round(t, 6), pool=s.pool)
-        if s.pool == 0:
+                        t_sim=round(t, 6), pool=s.total_pool(),
+                        cloud=pool.profile.name)
+        if s.total_pool() == 0:
             self.log.record("gateway:scale_to_zero", 0.0, model=s.dep.name,
                             t_sim=round(t, 6))
+
+    def _maybe_retire(self, s: _ModelState, t: float, payload, st) -> None:
+        cloud, rid, stamp = payload
+        pool = s.pools[cloud]
+        r = pool.replicas.get(rid)
+        if r is None or r.busy or r.last_active > stamp:
+            return                       # reused since the check was scheduled
+        if not s.dep.autoscaler.can_remove(pool.size(), pool.floor):
+            return
+        self._retire(s, pool, r, t, st)

@@ -86,7 +86,11 @@ class InferenceService:
                 l += p.model_load_s
             clock += l
             lat.append(l)
-        return ServeResult(self.strategy, n, clock, lat, [(0.0, 1)])
+        # one always-on replica billed for the whole run (simulated $,
+        # profile price sheet -- DESIGN.md §1)
+        cost = clock * p.cost_per_s
+        return ServeResult(self.strategy, n, clock, lat, [(0.0, 1)],
+                           cost_usd=cost, cost_by_cloud={p.name: cost})
 
     def _kserve_sim(self, n: int, seed: int = 0, arrivals=None,
                     slo="standard") -> ServeResult:
@@ -112,4 +116,6 @@ class InferenceService:
                            per_version=res.per_version,
                            class_latencies=res.class_latencies,
                            class_misses=res.class_misses,
-                           observed=res.observed)
+                           observed=res.observed,
+                           cost_usd=res.cost_usd,
+                           cost_by_cloud=res.cost_by_cloud)

@@ -5,13 +5,26 @@ these to build the paper's Tables 4/5 (per-stage pipeline timing).
 
 Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
   gateway:run                the whole simulation (a stage)
-  gateway:scale_up/down      replica launched / retired
-  gateway:scale_to_zero      pool emptied
+  gateway:scale_up/down      replica launched / retired (cloud-stamped)
+  gateway:scale_to_zero      every pool of a deployment emptied
   gateway:cold_start         first batch on a weightless replica
   gateway:scale_denied       launch refused (capacity or cloud_down)
-  gateway:capacity_exceeded  documented scale-from-zero budget breach
+  gateway:capacity_exceeded  documented scale-from-zero CLOUD budget breach
+  gateway:budget_exceeded    documented scale-from-zero breach of a
+                             deployment's max_replicas (queued work is
+                             pinned to a pool; starving it would stall)
   gateway:preempt            latency-class batch evicted an in-flight batch
-  gateway:failover/recover   deployment migrated off / back to its cloud
+  gateway:split              a model's live split weights changed (carries
+                             the normalized {cloud: weight} map, which sums
+                             to 1 unless every cloud is down; reasons:
+                             fail / recover / migrate)
+  gateway:migrate            a re-planning decision: an explicit
+                             MigrationSpec step (reason=plan) or an
+                             auto-replan shift (reason=overload /
+                             miss_rate / cost, with src/dst/delta)
+  gateway:failover/recover   outage edge as seen by one deployment -- the
+                             degenerate split (dead cloud's weight -> 0,
+                             restored on recovery)
   gateway:observed           measured arrival rate + realized service time
                              per model (placement.replan input)
 """

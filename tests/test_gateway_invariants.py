@@ -1,16 +1,20 @@
-"""Property-based invariants over random gateway fleets, traffic mixes and
-failure injections (ISSUE 2 archetype suite).
+"""Property-based invariants over random gateway fleets, traffic mixes,
+failure injections, active-active splits and live migrations (ISSUE 2
+archetype suite, extended to active-active by ISSUE 3).
 
-Four invariants, checked over randomly drawn scenarios:
+Five invariants, checked over randomly drawn scenarios:
 
-  1. every request completes EXACTLY once, even when preemption and cloud
-     failover re-queue in-flight batches;
+  1. every request completes EXACTLY once, even when preemption, cloud
+     failover and mid-run live migration re-queue in-flight batches;
   2. simulated time is monotonic per replica -- batches on one replica never
      overlap (a preempted batch ends at its preemption time);
   3. shared per-cloud capacity caps are never exceeded, except the
      documented scale-from-zero breach (gateway:capacity_exceeded);
   4. a fixed seed makes Gateway.run bit-for-bit deterministic (identical
-     summary dict and event-name sequence on a rebuilt gateway).
+     summary dict and event-name sequence on a rebuilt gateway);
+  5. split weights always normalize to 1: every gateway:split event and the
+     post-run final_weights map sum to 1 per model (0 only while every
+     cloud of a deployment is down).
 
 The scenario space is described once (``scenario``) and driven two ways:
 via hypothesis when it is installed (requirements-dev.txt; CI pins
@@ -25,7 +29,7 @@ import pytest
 
 from repro.clouds.profiles import get_profile
 from repro.serving.gateway import (AutoscalerConfig, FailureSpec, Gateway,
-                                   TrafficSpec)
+                                   MigrationSpec, ReplanConfig, TrafficSpec)
 from repro.telemetry.events import EventLog
 
 from conftest import AnalyticBackend
@@ -51,6 +55,7 @@ def scenario(pick_int, pick_choice, pick_float):
     for i in range(pick_int(1, 3)):
         m = {"name": f"m{i}", "cloud": pick_choice(CLOUDS),
              "standby": pick_choice((True, False)),
+             "split": pick_choice((None, 0.25, 0.5)),  # active-active share
              "min": pick_int(0, 1), "max": pick_int(1, 3),
              "tq": pick_choice((2, 8)),
              "idle": pick_choice((0.5, None)),    # None => never idles out
@@ -69,40 +74,63 @@ def scenario(pick_int, pick_choice, pick_float):
         failure = {"cloud": pick_choice(CLOUDS),
                    "at": pick_float(0.05, 1.5),
                    "dur": pick_float(0.2, 1.0)}
+    migration = None
+    if pick_choice((True, False)):       # mid-run live re-split of one model
+        migration = {"model": pick_int(0, len(models) - 1),
+                     "at": pick_float(0.05, 1.5),
+                     "frac": pick_float(0.0, 1.0)}
     capacity = {"gcp": 4, "ibm": 4} if pick_choice((True, False)) else None
     return {"models": models, "traffic": traffic, "failure": failure,
+            "migration": migration,
+            "replan": pick_choice((True, False)),
             "capacity": capacity, "seed": pick_int(0, 2 ** 16)}
 
 
 def build(p):
-    gw = Gateway(capacity=p["capacity"], log=EventLog(), record_batches=True)
+    gw = Gateway(capacity=p["capacity"], log=EventLog(), record_batches=True,
+                 replan=(ReplanConfig(check_every_s=0.2, sustain=2)
+                         if p["replan"] else None))
     for m in p["models"]:
         other = CLOUDS[1 - CLOUDS.index(m["cloud"])]
-        gw.deploy(
-            m["name"],
-            AnalyticBackend(m["name"], m["base_ms"] / 1e3, m["per_ms"] / 1e3),
-            get_profile(m["cloud"]),
-            standby=get_profile(other) if m["standby"] else None,
+        backend = AnalyticBackend(m["name"], m["base_ms"] / 1e3,
+                                  m["per_ms"] / 1e3)
+        kw = dict(
             autoscaler=AutoscalerConfig(
                 min_replicas=m["min"],
                 max_replicas=max(m["max"], m["min"]),
                 target_queue=m["tq"],
                 idle_window_s=math.inf if m["idle"] is None else m["idle"]),
             max_batch=m["max_batch"])
+        if m["split"] is not None:       # active-active over both clouds
+            gw.deploy(m["name"], backend,
+                      split={get_profile(m["cloud"]): 1.0 - m["split"],
+                             get_profile(other): m["split"]}, **kw)
+        else:
+            gw.deploy(m["name"], backend, get_profile(m["cloud"]),
+                      standby=get_profile(other) if m["standby"] else None,
+                      **kw)
     traffic = [TrafficSpec(t["model"], t["n"], arrival=t["arrival"],
                            rate=t["rate"], start_s=t["start"], slo=t["slo"])
                for t in p["traffic"]]
     failures = ([FailureSpec(p["failure"]["cloud"], p["failure"]["at"],
                              p["failure"]["dur"])]
                 if p["failure"] else [])
-    return gw, traffic, failures
+    migrations = []
+    if p["migration"]:
+        mi = p["migration"]
+        f = mi["frac"]
+        migrations.append(MigrationSpec(mi["at"], {
+            p["models"][mi["model"]]["name"]:
+                {"gcp": f, "ibm": 1.0 - f}}))
+    return gw, traffic, failures, migrations
 
 
 # -- the invariants ----------------------------------------------------------
 
 def run_and_check(p):
-    gw, traffic, failures = build(p)
-    out = gw.run(traffic, seed=p["seed"], failures=failures)
+    gw, traffic, failures, migrations = build(p)
+    out = gw.run(traffic, seed=p["seed"], failures=failures,
+                 migrations=migrations)
 
     want = {}
     for t in p["traffic"]:
@@ -143,16 +171,30 @@ def run_and_check(p):
     # 4. makespan covers every completion
     assert out.makespan_s >= max(
         r.total_time_s for r in out.per_model.values()) - 1e-9
+
+    # 5. split weights normalize to 1 (0 only while every cloud is down)
+    for e in gw.log.named("gateway:split"):
+        tot = sum(e["weights"].values())
+        assert abs(tot - 1.0) < 1e-4 or tot == 0.0, e
+    for m, w in gw.final_weights.items():
+        tot = sum(w.values())
+        assert abs(tot - 1.0) < 1e-4, (m, w)   # outages all end in-scenario
+
+    # simulated dollars exist and add up for every deployed model
+    assert set(gw.final_weights) == set(out.costs)
+    assert all(c >= 0.0 for c in out.costs.values())
+    assert abs(out.total_cost_usd - sum(out.costs.values())) < 1e-12
     return out
 
 
 def run_twice_and_compare(p):
     """Invariant 4: seed => bit-for-bit determinism on a rebuilt gateway."""
-    gw1, tr1, f1 = build(p)
-    out1 = gw1.run(tr1, seed=p["seed"], failures=f1)
-    gw2, tr2, f2 = build(p)
-    out2 = gw2.run(tr2, seed=p["seed"], failures=f2)
+    gw1, tr1, f1, m1 = build(p)
+    out1 = gw1.run(tr1, seed=p["seed"], failures=f1, migrations=m1)
+    gw2, tr2, f2, m2 = build(p)
+    out2 = gw2.run(tr2, seed=p["seed"], failures=f2, migrations=m2)
     assert out1.summary() == out2.summary()
+    assert gw1.final_weights == gw2.final_weights
     assert ([e["name"] for e in gw1.log.events]
             == [e["name"] for e in gw2.log.events])
 
