@@ -6,17 +6,25 @@ SLO/failover scenario (three traffic classes through a mid-run cloud outage
 vs a no-priority baseline on the same seed), plus an active-active
 split-vs-single-cloud scenario: the same capacity-constrained demand placed
 single-cloud and split, raced on identical traffic -- the split must win on
-at least one of {p99, simulated cost}.
+at least one of {p99, simulated cost} -- plus an OVERLOAD scenario (ISSUE
+4): stale split weights over unequal capacity, offered load past the
+fleet's ceiling, raced queue-aware-routing-plus-shedding vs pure weighted
+routing on the same seed -- queue-aware must win latency-class p99 while
+reporting a nonzero, bounded shed rate (batch work never shed).
 
 Every scenario also lands in ``benchmarks/BENCH_gateway.json`` (per-scenario
-p50/p99, deadline-miss rates, simulated dollars) so the perf trajectory is
-tracked across PRs instead of being print-only.
+p50/p99, deadline-miss rates, shed rates, simulated dollars; schema
+validated by ``validate_bench``) so the perf trajectory is tracked across
+PRs instead of being print-only.  ``python benchmarks/bench_gateway.py
+--smoke`` runs only the overload scenario + schema validation (the CI
+bench-smoke step).
 
 Compute service times are measured (jitted matmuls of three widths); the
 network / cold-start / price terms come from the CloudProfiles: any dollar
 or RTT figure here is a simulation output (DESIGN.md §1)."""
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
@@ -26,13 +34,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.clouds.profiles import get_profile
-from repro.serving.gateway import (SLO_CLASSES, AutoscalerConfig,
-                                   CloudCapacity, FailureSpec, Gateway,
-                                   ModelDemand, Predictor, SLOClass,
+from repro.serving.gateway import (SLO_CLASSES, AdmissionConfig,
+                                   AutoscalerConfig, CloudCapacity,
+                                   FailureSpec, Gateway, ModelDemand,
+                                   Predictor, RoutingConfig, SLOClass,
                                    TrafficSpec, plan_placement)
 from repro.telemetry.events import EventLog
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_gateway.json"
+BENCH_SCHEMA = 3
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
 # fleet-scale offered load in Erlangs (rate derived from the measured
@@ -53,13 +63,51 @@ def _model_record(res, cold: int) -> dict:
     return {"p50_s": round(res.p50, 6), "p99_s": round(res.p99, 6),
             "sim_cost_usd": round(res.cost_usd, 8),
             "cold_starts": cold,
+            "shed": res.shed_total,
+            "shed_rate": round(res.shed_rate, 4),
             "deadline_miss": {c: s["miss_rate"]
                               for c, s in res.per_class().items()}}
 
 
+def validate_bench(bench: dict, require: tuple = ()) -> None:
+    """BENCH_gateway.json schema check (the CI bench-smoke gate): every
+    scenario present carries its required keys -- including the ISSUE 4
+    shed-rate fields and the recorded queue-aware-vs-weights race."""
+    if bench.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"schema {bench.get('schema')} != {BENCH_SCHEMA}")
+    sc = bench.get("scenarios", {})
+    missing = [name for name in require if name not in sc]
+    if missing:
+        raise ValueError(f"missing scenarios: {missing}")
+    for name, rec in sc.get("fleet", {}).get("models", {}).items():
+        for k in ("p50_s", "p99_s", "sim_cost_usd", "cold_starts",
+                  "shed", "shed_rate", "deadline_miss"):
+            if k not in rec:
+                raise ValueError(f"fleet model {name} missing {k}")
+    for key in ("slo_failover", "split_cost"):
+        if key in sc and not sc[key]:
+            raise ValueError(f"scenario {key} is empty")
+    if "overload" in sc:
+        o = sc["overload"]
+        for k in ("queue_aware", "weights", "race"):
+            if k not in o:
+                raise ValueError(f"overload scenario missing {k}")
+        for side in ("queue_aware", "weights"):
+            for k in ("per_class", "shed", "shed_rate"):
+                if k not in o[side]:
+                    raise ValueError(f"overload.{side} missing {k}")
+        race = o["race"]
+        for k in ("winner", "latency_p99_queue_aware", "latency_p99_weights",
+                  "shed_rate"):
+            if k not in race:
+                raise ValueError(f"overload race missing {k}")
+        if not 0 < race["shed_rate"] <= 0.5:
+            raise ValueError(f"shed rate {race['shed_rate']} not in (0, .5]")
+
+
 def run() -> list[dict]:
     preds = {n: _make_predictor(n, w) for n, w in WIDTHS.items()}
-    bench: dict = {"schema": 2, "scenarios": {}}
+    bench: dict = {"schema": BENCH_SCHEMA, "scenarios": {}}
 
     # -- placement: both objectives over gcp/ibm ---------------------------
     demands = [ModelDemand(n, PLANNED_LOADS[n] / (preds[n].service_time(8) / 8),
@@ -143,6 +191,9 @@ def run() -> list[dict]:
     assert any(r == 0 for _, r in out.per_model["large"].replica_trace[1:])
     rows.extend(_slo_failover_scenario(preds["large"], bench))
     rows.extend(_split_cost_scenario(preds["medium"], bench))
+    rows.extend(_overload_shed_scenario(preds["small"], bench))
+    validate_bench(bench, require=("fleet", "slo_failover", "split_cost",
+                                   "overload"))
     BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
     print(f"wrote {BENCH_JSON}", file=sys.stderr)
     return rows
@@ -308,3 +359,135 @@ def _split_cost_scenario(pred: Predictor, bench: dict) -> list[dict]:
                    f"split_cost={out_split.total_cost_usd:.6f};"
                    f"single_cost={out_single.total_cost_usd:.6f}",
     }]
+
+
+def _overload_shed_scenario(pred: Predictor, bench: dict) -> list[dict]:
+    """Overload acceptance (ISSUE 4): a STALE 50/50 split over unequal
+    capacity (ibm is capacity-pinned at one replica, gcp can grow to two)
+    under offered load past the whole fleet's ceiling, raced two ways on
+    the same seed and traffic:
+
+      weights      pure weighted routing, no admission control -- half of
+                   everything piles onto the one ibm replica;
+      queue_aware  the ISSUE 4 blend -- requests join the best expected
+                   queue, deadline-hopeless latency/standard work is shed
+                   (exactly once, batch only deferred), and shed-pressure
+                   still drives scale-up.
+
+    queue-aware + shedding must win latency-class p99 while reporting a
+    NONZERO but BOUNDED (<= 0.5) shed rate.  Timing derives from the
+    measured batch service time so every host lands in the same
+    utilization regime."""
+    t8 = pred.service_time(8)
+    prof = get_profile("gcp")
+    per_batch = prof.network_rtt_s + prof.lb_overhead_s + t8
+    cap_rps = 3 * 8 / per_batch          # 3-replica fleet ceiling
+    window_s = 40 * per_batch
+    n_batch = int(0.5 * cap_rps * window_s)      # burst backlog, never shed
+    n_std = int(0.6 * cap_rps * window_s)
+    n_lat = int(0.3 * cap_rps * window_s)
+    traffic = [
+        TrafficSpec("m", n_batch, slo="batch"),
+        TrafficSpec("m", n_std, arrival="poisson", rate=n_std / window_s),
+        TrafficSpec("m", n_lat, slo="latency",
+                    arrival="poisson", rate=n_lat / window_s),
+    ]
+
+    def run_once(queue_aware: bool):
+        log = EventLog()
+        gw = Gateway(capacity={"gcp": 3, "ibm": 1}, log=log,
+                     routing=RoutingConfig(
+                         "queue_aware" if queue_aware else "weights"),
+                     admission=AdmissionConfig() if queue_aware else None)
+        gw.deploy("m", pred,
+                  split={get_profile("gcp"): 0.5, get_profile("ibm"): 0.5},
+                  autoscaler=AutoscalerConfig(min_replicas=2, max_replicas=4,
+                                              target_queue=8,
+                                              scale_up_delay_s=0.01,
+                                              idle_window_s=np.inf),
+                  max_batch=8)
+        return gw.run(traffic, seed=0), log
+
+    out_q, log_q = run_once(queue_aware=True)
+    out_w, _ = run_once(queue_aware=False)
+    res_q, res_w = out_q.per_model["m"], out_w.per_model["m"]
+    pc_q, pc_w = res_q.per_class(), res_w.per_class()
+    # a fully shed class reports p99_s=None; fail with the scenario stats
+    # rather than a TypeError in the table / comparison below
+    assert all(pc[c]["n"] > 0 for pc in (pc_q, pc_w)
+               for c in ("latency", "standard", "batch")), \
+        f"a class was fully shed -- retune the overload regime: {pc_q}"
+
+    print("overload race (queue-aware + shedding vs pure weights, "
+          "same seed, 50/50 split over 2:1 capacity):", file=sys.stderr)
+    print(f"  {'class':<10}{'qa_p99_s':>12}{'w_p99_s':>12}{'qa_shed':>9}",
+          file=sys.stderr)
+    for c in ("latency", "standard", "batch"):
+        print(f"  {c:<10}{pc_q[c]['p99_s']:>12.5f}{pc_w[c]['p99_s']:>12.5f}"
+              f"{pc_q[c]['shed']:>9}", file=sys.stderr)
+    print(f"  shed rate {res_q.shed_rate:.4f} "
+          f"({res_q.shed_total}/{res_q.n_requests})", file=sys.stderr)
+
+    # acceptance: queue-aware + shedding beats pure weights on the latency
+    # class tail; the shed rate is nonzero but bounded; batch is intact
+    assert pc_q["latency"]["p99_s"] < pc_w["latency"]["p99_s"], (pc_q, pc_w)
+    assert 0 < res_q.shed_rate <= 0.5, res_q.shed_rate
+    assert res_q.class_shed.get("batch", 0) == 0
+    assert len(res_q.class_latencies["batch"]) == n_batch
+    assert res_w.shed_total == 0         # baseline admits everything
+    # shedding must not mask the overload from the autoscaler
+    assert log_q.count("gateway:scale_up") >= 1
+
+    bench["scenarios"]["overload"] = {
+        "queue_aware": {"per_class": pc_q, "shed": res_q.shed_total,
+                        "shed_rate": round(res_q.shed_rate, 4),
+                        "sim_cost_usd": round(out_q.total_cost_usd, 8)},
+        "weights": {"per_class": pc_w, "shed": res_w.shed_total,
+                    "shed_rate": 0.0,
+                    "sim_cost_usd": round(out_w.total_cost_usd, 8)},
+        "race": {"winner": "queue_aware",
+                 "latency_p99_queue_aware": pc_q["latency"]["p99_s"],
+                 "latency_p99_weights": pc_w["latency"]["p99_s"],
+                 "shed_rate": round(res_q.shed_rate, 4),
+                 "scale_ups_queue_aware":
+                     log_q.count("gateway:scale_up")}}
+    return [{
+        "name": "gateway_overload_race",
+        "us_per_call": pc_q["latency"]["p99_s"] * 1e6,
+        "derived": f"qa_latency_p99_s={pc_q['latency']['p99_s']:.5f};"
+                   f"w_latency_p99_s={pc_w['latency']['p99_s']:.5f};"
+                   f"shed_rate={res_q.shed_rate:.4f};"
+                   f"shed={res_q.shed_total};"
+                   f"batch_shed={res_q.class_shed.get('batch', 0)}",
+    }]
+
+
+def smoke() -> None:
+    """CI bench-smoke: run only the overload scenario, then validate both
+    the freshly produced record and (when present) the committed
+    BENCH_gateway.json against the schema -- including the shed-rate
+    fields and the recorded queue-aware-vs-weights race."""
+    pred = _make_predictor("small", WIDTHS["small"])
+    bench: dict = {"schema": BENCH_SCHEMA, "scenarios": {}}
+    _overload_shed_scenario(pred, bench)
+    validate_bench(bench, require=("overload",))
+    if BENCH_JSON.exists():
+        validate_bench(json.loads(BENCH_JSON.read_text()),
+                       require=("fleet", "slo_failover", "split_cost",
+                                "overload"))
+        print(f"validated {BENCH_JSON}", file=sys.stderr)
+    print("overload race:",
+          json.dumps(bench["scenarios"]["overload"]["race"]),
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="overload scenario + schema validation only (CI)")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for r in run():
+            print(f"{r['name']},{r['us_per_call']:.3f},{r['derived']}")

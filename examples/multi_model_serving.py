@@ -70,21 +70,26 @@ def main():
     assert plan.feasible, "fleet does not fit the configured clouds"
     split_of = {a.model: {get_profile(c): w for c, w in a.weights.items()}
                 for a in plan.assignments}
+    # the plan's expected-queue hints seed queue-aware routing (the
+    # default policy) before any real queue signal exists
+    hint_of = {a.model: dict(a.est_wait_s) for a in plan.assignments}
 
     log = EventLog()
     gw = Gateway(capacity=plan.capacity_map(), log=log)
     gw.deploy("lenet", classifier, split=split_of["lenet"],
               autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
                                           target_queue=8, idle_window_s=2.0),
-              max_batch=8)
+              max_batch=8, queue_hint=hint_of["lenet"])
     gw.deploy("embed", embedder, split=split_of["embed"],
               autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
                                           target_queue=8, idle_window_s=2.0),
-              max_batch=16, canary=embedder_v2, canary_fraction=0.25)
+              max_batch=16, canary=embedder_v2, canary_fraction=0.25,
+              queue_hint=hint_of["embed"])
     gw.deploy("llm", llm, split=split_of["llm"],
               autoscaler=AutoscalerConfig(min_replicas=0, max_replicas=2,
                                           scale_up_delay_s=0.5,
-                                          idle_window_s=1.0), max_batch=4)
+                                          idle_window_s=1.0), max_batch=4,
+              queue_hint=hint_of["llm"])
     out = gw.run([
         TrafficSpec("lenet", 200, arrival="poisson", rate=1000.0),
         TrafficSpec("embed", 128),                 # burst, 25% canary

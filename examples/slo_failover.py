@@ -2,7 +2,9 @@
 (latency / standard / batch) on one fleet, a mid-run gcp failure with ibm
 standby, an observed-load re-plan afterwards -- and the revised plan
 applied LIVE to a second window via a MigrationPlan (drain-and-shift, no
-requests dropped).
+requests dropped), then the same outage window replayed WITH per-class
+admission control (deadline-hopeless latency/standard work is shed
+exactly once, batch work only deferred).
 
 The run shows the full loop: class-weighted dispatch + preemption keeps
 the latency class fast while the batch class absorbs the queueing; the
@@ -20,10 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.clouds.profiles import get_profile
-from repro.serving.gateway import (AutoscalerConfig, CloudCapacity,
-                                   FailureSpec, Gateway, MigrationSpec,
-                                   ModelDemand, Predictor, TrafficSpec,
-                                   plan_placement, replan)
+from repro.serving.gateway import (AdmissionConfig, AutoscalerConfig,
+                                   CloudCapacity, FailureSpec, Gateway,
+                                   MigrationSpec, ModelDemand, Predictor,
+                                   TrafficSpec, plan_placement, replan)
 from repro.telemetry.events import EventLog
 
 
@@ -57,14 +59,15 @@ def main():
     t8 = pred.service_time(8)
     per_batch = get_profile("gcp").network_rtt_s + t8
     drain = (640 / 8) * per_batch / 2
-    out = gw.run([
+    traffic = [
         TrafficSpec("ranker", 640, slo="batch"),              # bulk backlog
         TrafficSpec("ranker", 96, slo="standard",
                     arrival="poisson", rate=96 / drain),
         TrafficSpec("ranker", 64, slo="latency",
                     arrival="poisson", rate=64 / (0.4 * drain)),
-    ], seed=0, failures=[FailureSpec("gcp", at_s=0.6 * drain,
-                                     duration_s=0.5 * drain)])
+    ]
+    outage = FailureSpec("gcp", at_s=0.6 * drain, duration_s=0.5 * drain)
+    out = gw.run(traffic, seed=0, failures=[outage])
 
     print("per-class latencies through the outage:")
     print(json.dumps(out.per_class(), indent=1))
@@ -101,6 +104,32 @@ def main():
           f"- sim cost ${out2.total_cost_usd:.6f}")
     assert log.count("gateway:migrate") >= 1
     assert out2.per_model["ranker"].n_requests == 160
+
+    # replay the outage window WITH per-class admission control: requests
+    # whose expected completion already breaks their deadline are shed at
+    # the door (gateway:shed, exactly once) instead of queueing to certain
+    # failure -- batch work is only deferred, and the survivors' per-class
+    # tail collapses because the hopeless work no longer clogs the queues
+    adm_log = EventLog()
+    adm = Gateway(capacity=plan.capacity_map(), log=adm_log,
+                  admission=AdmissionConfig())
+    adm.deploy("ranker", pred, get_profile("gcp"), standby=get_profile("ibm"),
+               autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=2,
+                                           scale_up_delay_s=0.02,
+                                           idle_window_s=np.inf),
+               max_batch=8)
+    out3 = adm.run(traffic, seed=0, failures=[outage])
+    res3 = out3.per_model["ranker"]
+    pc3 = out3.per_class()
+    print("same outage window with admission control:")
+    print(json.dumps(pc3, indent=1))
+    print(f"  shed {res3.shed_total}/{res3.n_requests} "
+          f"(rate {res3.shed_rate:.4f}), by class {res3.class_shed}")
+    assert res3.class_shed.get("batch", 0) == 0   # deferred, never shed
+    assert len(res3.class_latencies["batch"]) == 640
+    n_shed = adm_log.count("gateway:shed")
+    assert n_shed == res3.shed_total              # exactly once, all logged
+    assert len(res3.latencies_s) + n_shed == res3.n_requests
 
 
 if __name__ == "__main__":

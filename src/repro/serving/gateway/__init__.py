@@ -1,23 +1,26 @@
 """Model-mesh serving gateway: multi-model routing with SLO classes,
-preemption, active-active multi-cloud splits and live migration
+preemption, active-active multi-cloud splits, queue-aware weighted-JSQ
+routing + per-class admission control (load shedding) and live migration
 (router.py), cost-aware scale-to-zero autoscaling (autoscaler.py),
-split-aware multi-cloud placement + observed-load re-planning + plan
-diffs (placement.py).  See DESIGN.md §Gateway."""
+split-aware multi-cloud placement + expected-queue hints + observed-load
+re-planning + plan diffs (placement.py).  See DESIGN.md §Gateway."""
 from .autoscaler import Autoscaler, AutoscalerConfig, PoolView
 from .placement import (Assignment, CloudCapacity, MigrationPlan,
                         MigrationStep, ModelDemand, PlacementPlan, diff_plans,
-                        est_p99_s, plan_placement, replan, replicas_needed)
-from .router import (SLO_CLASSES, BatcherBackend, Deployment, FailureSpec,
-                     Gateway, GatewayResult, MigrationSpec, Predictor,
-                     ReplanConfig, ServeResult, SLOClass, TrafficSpec,
-                     resolve_slo)
+                        est_p99_s, est_wait_s, plan_placement, replan,
+                        replicas_needed)
+from .router import (SLO_CLASSES, AdmissionConfig, BatcherBackend, Deployment,
+                     FailureSpec, Gateway, GatewayResult, MigrationSpec,
+                     Predictor, ReplanConfig, RoutingConfig, ServeResult,
+                     SLOClass, TrafficSpec, resolve_slo)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "PoolView",
     "Assignment", "CloudCapacity", "MigrationPlan", "MigrationStep",
-    "ModelDemand", "PlacementPlan", "diff_plans", "est_p99_s",
+    "ModelDemand", "PlacementPlan", "diff_plans", "est_p99_s", "est_wait_s",
     "plan_placement", "replan", "replicas_needed",
-    "BatcherBackend", "Deployment", "FailureSpec", "Gateway", "GatewayResult",
-    "MigrationSpec", "Predictor", "ReplanConfig", "ServeResult", "SLOClass",
+    "AdmissionConfig", "BatcherBackend", "Deployment", "FailureSpec",
+    "Gateway", "GatewayResult", "MigrationSpec", "Predictor", "ReplanConfig",
+    "RoutingConfig", "ServeResult", "SLOClass",
     "SLO_CLASSES", "TrafficSpec", "resolve_slo",
 ]

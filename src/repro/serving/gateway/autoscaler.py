@@ -11,6 +11,10 @@ then executes the decision inside the discrete-event loop (router.py).
 Scale-up     queue_len > target_queue * pool  (KServe KPA queue-depth rule,
              same rule InferenceService used pre-gateway), evaluated PER
              POOL now that a deployment may hold one pool per cloud.
+             ``effective_queue`` folds the router's shed-pressure (requests
+             admission control dropped since the last launch/probe) into
+             the queue term: shed demand is still demand, so shedding
+             triggers scale-up instead of masking the overload (ISSUE 4).
 Scale-down   a replica idle for idle_window_s is retired, never below the
              pool's floor (its apportioned share of min_replicas).
              min_replicas=0 enables scale-to-zero.
@@ -62,6 +66,14 @@ class Autoscaler:
         (router.py) -- this is the pure queue-pressure rule."""
         return (queue_len > self.cfg.target_queue * max(pool, 1)
                 and pool < self.cfg.max_replicas)
+
+    @staticmethod
+    def effective_queue(queue_len: int, shed_pressure: int) -> int:
+        """Queue depth as the scaling policy should see it: the real queue
+        plus the requests admission control shed since the last launch or
+        probe window.  Shedding keeps queues short by design; without this
+        term an overloaded, hard-shedding pool would never scale up."""
+        return queue_len + shed_pressure
 
     def can_remove(self, pool: int, floor: Optional[int] = None) -> bool:
         """``floor`` is the pool's apportioned share of min_replicas; a

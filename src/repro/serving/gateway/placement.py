@@ -56,6 +56,20 @@ def replicas_needed(demand: ModelDemand, *,
     return max(1, math.ceil(demand.load / target_util))
 
 
+def est_wait_s(demand: ModelDemand, replicas: int) -> float:
+    """Expected steady-state queueing wait (M/M/1-style, per replica) --
+    the planner's expected-queue hint.  An Assignment carries one per
+    cloud; the router's queue-aware `_route` uses it as a prior for pools
+    that have no live queue signal yet (Gateway.deploy(queue_hint=...)).
+    inf when saturated, same rule as est_p99_s."""
+    if replicas <= 0:
+        return math.inf
+    rho = demand.load / replicas
+    if rho >= 1.0:
+        return math.inf
+    return demand.service_time_s * rho / (1.0 - rho)
+
+
 def est_p99_s(profile: CloudProfile, demand: ModelDemand,
               replicas: int) -> float:
     """rtt + lb + service + 3x an M/M/1-style waiting term at per-replica
@@ -65,12 +79,9 @@ def est_p99_s(profile: CloudProfile, demand: ModelDemand,
     Saturated assignments (rho >= 1, or no replicas at all) have no finite
     tail: the queue grows without bound, so the estimate is inf, never a
     misleading finite number."""
-    if replicas <= 0:
+    wait = est_wait_s(demand, replicas)
+    if not math.isfinite(wait):
         return math.inf
-    rho = demand.load / replicas
-    if rho >= 1.0:
-        return math.inf
-    wait = demand.service_time_s * rho / (1.0 - rho)
     return (profile.network_rtt_s + profile.lb_overhead_s
             + demand.service_time_s + 3.0 * wait)
 
@@ -80,12 +91,16 @@ class Assignment:
     """One model's placement: per-cloud replica shares plus the traffic
     weights the router should split arrivals by.  A single-cloud placement
     is the degenerate one-entry case; ``shares == {}`` means unplaceable
-    under capacity.  Weights always sum to 1 for a placed model."""
+    under capacity.  Weights always sum to 1 for a placed model.
+    ``est_wait_s`` is the per-cloud expected-queue hint (steady-state
+    queueing wait at the planned utilization) that feeds
+    Gateway.deploy(queue_hint=...) for queue-aware routing."""
     model: str
     shares: dict                 # cloud -> replicas (int)
     weights: dict                # cloud -> traffic fraction
     est_p99_s: float             # worst share's tail estimate
     cost_hr: float
+    est_wait_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def cloud(self) -> Optional[str]:
@@ -106,10 +121,11 @@ class Assignment:
 
 
 def _single(model: str, cloud: Optional[str], replicas: int,
-            p99: float, cost: float) -> Assignment:
+            p99: float, cost: float, wait: float = math.inf) -> Assignment:
     if cloud is None:
         return Assignment(model, {}, {}, math.inf, 0.0)
-    return Assignment(model, {cloud: replicas}, {cloud: 1.0}, p99, cost)
+    return Assignment(model, {cloud: replicas}, {cloud: 1.0}, p99, cost,
+                      {cloud: wait})
 
 
 @dataclasses.dataclass
@@ -153,6 +169,9 @@ class PlacementPlan:
                     "est_p99_s": fin(a.est_p99_s),
                     "saturated": a.saturated,
                     "cost_hr": round(a.cost_hr, 4),
+                    **({"est_wait_s": {c: fin(w)
+                                       for c, w in a.est_wait_s.items()}}
+                       if a.est_wait_s else {}),
                     **({"shares": dict(a.shares),
                         "weights": {c: round(w, 6)
                                     for c, w in a.weights.items()}}
@@ -193,10 +212,13 @@ def _split_assign(d: ModelDemand, need: int, clouds: list,
         by_name[cl].profile,
         ModelDemand(d.name, d.rate * weights[cl], d.service_time_s), n)
         for cl, n in shares.items())
+    waits = {cl: est_wait_s(
+        ModelDemand(d.name, d.rate * weights[cl], d.service_time_s), n)
+        for cl, n in shares.items()}
     cost = sum(n * by_name[cl].replica_cost_hr for cl, n in shares.items())
     for cl, n in shares.items():
         remaining[cl] -= n
-    return Assignment(d.name, shares, weights, est, cost)
+    return Assignment(d.name, shares, weights, est, cost, waits)
 
 
 def plan_placement(models: list, clouds: list, objective: str = "cost", *,
@@ -238,7 +260,8 @@ def plan_placement(models: list, clouds: list, objective: str = "cost", *,
             continue
         _, c, p99, cost = best
         remaining[c.profile.name] -= need
-        assignments.append(_single(d.name, c.profile.name, need, p99, cost))
+        assignments.append(_single(d.name, c.profile.name, need, p99, cost,
+                                   est_wait_s(d, need)))
     return PlacementPlan(objective, assignments, feasible,
                          clouds=list(clouds), split=split)
 

@@ -39,6 +39,31 @@ one primitive (``_set_weights``, drain-and-shift, exactly-once):
   weights (``gateway:recover``).  There is no separate failover code
   path.
 
+Queue-aware routing (DESIGN.md S3): with the default
+``RoutingConfig(policy="queue_aware")`` the split weights only set the
+BIAS.  Each arrival scores every live pool with an expected-completion
+estimate (queue depth x amortized service estimate + RTT/LB + cold-start
+risk + scale-from-zero delay), keeps the pools within a slack band of the
+best score, and resolves the request's pre-drawn uniform against the
+declared weights of that band -- weighted join-shortest-expected-queue.  A
+pool drowning in backlog falls out of the band and stops receiving
+traffic until it drains; with balanced queues the band holds every live
+pool and routing degenerates to the pure weighted draw
+(``policy="weights"``, the pre-ISSUE-4 behavior, kept for A/B racing).
+
+Admission control (Gateway(admission=AdmissionConfig(...)), off by
+default): at enqueue -- and again at dispatch -- a request whose expected
+completion already exceeds ``margin x`` its class deadline (measured
+against the SERVING pool's own warm path, not the primary's) is SHED
+exactly once: dropped with a ``gateway:shed`` event, counted per class in
+ServeResult/GatewayResult, excluded from latency percentiles.  Classes
+with ``sheddable=False`` (batch) or an infinite deadline are never shed,
+only deferred.  Shedding is an overload signal, not a mask: each shed
+adds pool shed-pressure that the autoscaler reads as queue depth (so a
+shedding pool scales up / from zero) and ReplanConfig probes treat a
+window shed-rate breach like a deadline-miss breach (weight shifts away,
+``gateway:migrate reason=shed_rate``).
+
 SLO layer (DESIGN.md S3): every request carries an SLOClass
 (latency / standard / batch).  Dispatch serves the queue maximizing
 ``weight * age-of-oldest`` instead of longest-queue; a ``latency`` batch
@@ -79,13 +104,15 @@ class SLOClass:
     deployment's warm single-request path (rtt + lb + service_time(1)), so
     the same class means the same *relative* promise on any backend.
     ``preempts`` classes may evict an in-flight ``preemptible`` batch when
-    no replica is idle.
+    no replica is idle.  ``sheddable=False`` work is never dropped by
+    admission control, only deferred (batch: finishing late beats never).
     """
     name: str
     weight: float
     deadline_mult: float
     preempts: bool = False
     preemptible: bool = False
+    sheddable: bool = True
 
 
 SLO_CLASSES = {
@@ -93,7 +120,7 @@ SLO_CLASSES = {
                         preempts=True),
     "standard": SLOClass("standard", weight=1.0, deadline_mult=20.0),
     "batch": SLOClass("batch", weight=0.25, deadline_mult=math.inf,
-                      preemptible=True),
+                      preemptible=True, sheddable=False),
 }
 
 
@@ -105,6 +132,53 @@ def resolve_slo(slo) -> SLOClass:
     except KeyError:
         raise ValueError(f"unknown SLO class {slo!r}; "
                          f"known: {sorted(SLO_CLASSES)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingConfig:
+    """How `_route` picks a pool within a live split (Gateway(routing=...)).
+
+    policy="queue_aware" (default): weighted join-shortest-expected-queue.
+    Every live pool is scored with the expected-completion estimate
+    (`Gateway._expected_wait`: queue depth x amortized service estimate +
+    RTT/LB + cold-start risk); pools scoring within ``slack`` (relative)
+    of the best stay in the candidate band, and the request's pre-drawn
+    uniform resolves a weighted draw over the band -- so balanced pools
+    split by the declared weights, while a backlogged or cold pool falls
+    out of the band and gets no new traffic until it recovers.  Fully
+    deterministic under the run seed.
+
+    policy="weights": the pre-ISSUE-4 pure weighted draw, kept for A/B
+    comparison (bench_gateway races the two) and share-exact tests.
+    """
+    policy: str = "queue_aware"
+    slack: float = 0.25
+
+    def __post_init__(self):
+        if self.policy not in ("queue_aware", "weights"):
+            raise ValueError(f"unknown routing policy {self.policy!r}")
+        if self.slack < 0:
+            raise ValueError("slack must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Per-class admission control (Gateway(admission=...), off when None).
+
+    A request is shed -- exactly once, `gateway:shed` -- when its expected
+    completion already exceeds ``margin x`` its class deadline, measured
+    against the SERVING pool's own warm path (rtt + lb + service_time(1)):
+    at enqueue via the routing estimate, and (``recheck_at_dispatch``)
+    again when its queue reaches a replica, using the then-known best-case
+    completion.  ``sheddable=False`` classes and infinite deadlines are
+    exempt: deferred, never dropped.
+    """
+    margin: float = 1.0
+    recheck_at_dispatch: bool = True
+
+    def __post_init__(self):
+        if self.margin <= 0:
+            raise ValueError("margin must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,12 +212,15 @@ class ReplanConfig:
     """Continuous re-planning knobs (Gateway(replan=...)).  Every
     ``check_every_s`` of simulated time the router probes each model:
 
-    - a pool whose queue exceeds ``overload_factor * target_queue *
-      replicas`` while its cloud can no longer grow, or a model whose
-      recent deadline-miss rate breaches ``max_miss_rate`` (over at least
-      ``min_window_n`` completions), sustained for ``sustain`` consecutive
-      probes, shifts ``shift`` of the hottest pool's weight toward the
-      cheapest cloud with headroom (gateway:migrate);
+    - a pool whose queue (plus its shed-pressure: requests admission
+      control dropped since the last probe/launch) exceeds
+      ``overload_factor * target_queue * replicas`` while its cloud can no
+      longer grow, or a model whose recent deadline-miss rate breaches
+      ``max_miss_rate`` (over at least ``min_window_n`` completions), or
+      whose window shed rate breaches ``max_shed_rate`` (shedding is an
+      overload signal, never a mask), sustained for ``sustain``
+      consecutive probes, shifts ``shift`` of the hottest pool's weight
+      toward the cheapest cloud with headroom (gateway:migrate);
     - with ``consolidate``, a fully idle multi-cloud split sustained for
       ``sustain`` probes folds its most expensive pool into the cheapest
       one (weight -> 0, so the expensive replicas idle out first).
@@ -151,6 +228,7 @@ class ReplanConfig:
     check_every_s: float = 0.25
     overload_factor: float = 2.0
     max_miss_rate: float = 0.5
+    max_shed_rate: float = 0.1
     min_window_n: int = 8
     shift: float = 0.5
     sustain: int = 2
@@ -159,6 +237,8 @@ class ReplanConfig:
     def __post_init__(self):
         if self.check_every_s <= 0:
             raise ValueError("check_every_s must be > 0")
+        if not 0 < self.max_shed_rate <= 1:
+            raise ValueError("max_shed_rate must be in (0, 1]")
         if not 0 < self.shift <= 1:
             raise ValueError("shift must be in (0, 1]")
         if self.sustain < 1:
@@ -169,24 +249,29 @@ class ReplanConfig:
 
 # -- results / backends (moved from kserve.py; it re-exports them) ----------
 
-def _class_stats(lats: list, misses: int) -> dict:
+def _class_stats(lats: list, misses: int, shed: int = 0) -> dict:
+    """Per-class stats: percentiles/miss over SERVED requests only; shed
+    requests are reported separately (shed_rate is shed / offered)."""
     n = len(lats)
     return {"n": n,
-            "p50_s": round(float(np.percentile(lats, 50)), 6),
-            "p99_s": round(float(np.percentile(lats, 99)), 6),
-            "miss_rate": round(misses / n, 4)}
+            "p50_s": round(float(np.percentile(lats, 50)), 6) if n else None,
+            "p99_s": round(float(np.percentile(lats, 99)), 6) if n else None,
+            "miss_rate": round(misses / n, 4) if n else 0.0,
+            "shed": shed,
+            "shed_rate": round(shed / (n + shed), 4) if n + shed else 0.0}
 
 
 @dataclasses.dataclass
 class ServeResult:
     strategy: str
-    n_requests: int
+    n_requests: int                      # OFFERED requests (served + shed)
     total_time_s: float
-    latencies_s: list
+    latencies_s: list                    # served requests only (shed excluded)
     replica_trace: list = dataclasses.field(default_factory=list)
     per_version: dict = dataclasses.field(default_factory=dict)
     class_latencies: dict = dataclasses.field(default_factory=dict)
     class_misses: dict = dataclasses.field(default_factory=dict)
+    class_shed: dict = dataclasses.field(default_factory=dict)
     observed: dict = dataclasses.field(default_factory=dict)
     # SIMULATED dollars (CloudProfile.cost_per_s price sheet, DESIGN.md S1):
     # replica-seconds provisioned x per-cloud price, never a measurement
@@ -195,27 +280,46 @@ class ServeResult:
 
     @property
     def p50(self):
-        return float(np.percentile(self.latencies_s, 50))
+        return float(np.percentile(self.latencies_s, 50)) \
+            if self.latencies_s else 0.0
 
     @property
     def p99(self):
-        return float(np.percentile(self.latencies_s, 99))
+        return float(np.percentile(self.latencies_s, 99)) \
+            if self.latencies_s else 0.0
+
+    @property
+    def shed_total(self) -> int:
+        return int(sum(self.class_shed.values()))
+
+    @property
+    def shed_rate(self) -> float:
+        """Shed / offered; 0.0 with admission control off."""
+        return self.shed_total / self.n_requests if self.n_requests else 0.0
 
     def per_class(self) -> dict:
-        """Per-SLO-class p50/p99 and deadline-miss rate."""
-        return {c: _class_stats(lats, self.class_misses.get(c, 0))
-                for c, lats in sorted(self.class_latencies.items())}
+        """Per-SLO-class p50/p99, deadline-miss rate (SERVED requests,
+        against the PRIMARY cloud's warm path -- the deployment-level
+        promise, see DESIGN.md S3) and shed count/rate."""
+        names = sorted(set(self.class_latencies) | set(self.class_shed))
+        return {c: _class_stats(self.class_latencies.get(c, []),
+                                self.class_misses.get(c, 0),
+                                self.class_shed.get(c, 0))
+                for c in names}
 
     def summary(self) -> dict:
         return {"strategy": self.strategy, "n": self.n_requests,
                 "total_s": round(self.total_time_s, 4),
                 "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
                 "replicas_max": max([r for _, r in self.replica_trace], default=1),
+                **({"shed": self.shed_total,
+                    "shed_rate": round(self.shed_rate, 4)}
+                   if self.shed_total else {}),
                 **({"sim_cost_usd": round(self.cost_usd, 6)}
                    if self.cost_by_cloud else {}),
                 **({"per_version": self.per_version} if self.per_version else {}),
                 **({"per_class": self.per_class()}
-                   if self.class_latencies else {})}
+                   if self.class_latencies or self.class_shed else {})}
 
 
 class Predictor:
@@ -316,7 +420,12 @@ def _pow2(b: int) -> int:
 
 def _apportion(total: int, weights: dict) -> dict:
     """Largest-remainder split of ``total`` replicas by weight (zero-weight
-    pools get zero); deterministic tie-break by remainder, weight, name."""
+    pools get zero); deterministic tie-break by remainder, weight, name.
+
+    Whenever ``total >= len(live)`` every live-weight pool is guaranteed at
+    least one replica (ISSUE 4 bugfix: a 0.95/0.05 split at total=2 used to
+    floor the 0.05 pool at ZERO replicas while routing still sent it
+    traffic, parking those requests until the autoscaler noticed)."""
     live = {c: w for c, w in weights.items() if w > 0}
     out = {c: 0 for c in weights}
     if not live or total <= 0:
@@ -329,6 +438,14 @@ def _apportion(total: int, weights: dict) -> dict:
     order = sorted(live, key=lambda c: (-(exact[c] - out[c]), -live[c], c))
     for c in order[:left]:
         out[c] += 1
+    if total >= len(live):               # min-1 floor for every live pool
+        empty = sorted((c for c in live if out[c] == 0),
+                       key=lambda c: (-live[c], c))
+        for c in empty:
+            donor = max((d for d in live if out[d] >= 2),
+                        key=lambda d: (out[d], live[d], d))
+            out[donor] -= 1
+            out[c] += 1
     return out
 
 
@@ -371,6 +488,9 @@ class Deployment:
     standby: Optional[CloudProfile] = None   # zero-weight failover pool
     placements: list = dataclasses.field(default_factory=list)
     # [(CloudProfile, weight)]: the declared split, standby appended at 0
+    queue_hint: dict = dataclasses.field(default_factory=dict)
+    # {cloud: expected queueing wait s} planner prior (Assignment.est_wait_s)
+    # used by queue-aware routing while a pool has no queue of its own yet
 
     @property
     def backends(self) -> list:
@@ -406,6 +526,9 @@ class _Pool:
         self.scheduled_up = 0
         self.generation = 0              # bumps on drain; stale "up" dropped
         self.replica_seconds = 0.0       # provisioned time (simulated $)
+        self.shed_pressure = 0           # sheds since the last launch/probe:
+        # unmet demand the autoscaler must see as queue depth, so shedding
+        # triggers scale-up instead of masking the overload
 
     def size(self) -> int:
         return len(self.replicas) + self.scheduled_up
@@ -440,8 +563,16 @@ class _ModelState:
         self.served = 0
         self.busy_s = 0.0                # realized backend service seconds
         self.deadline_base = 0.0         # warm single-request path, primary
+        # per-request shed state (admission control): shed exactly once,
+        # excluded from latency percentiles, counted per class
+        self.shed = np.zeros(len(arr), bool)
+        self.class_shed: dict[str, int] = {}
+        self.svc1 = 0.0                  # service_time(1), per-pool bases
+        self.svc_est = 0.0               # amortized per-request service est.
+        self.base_by_cloud: dict[str, float] = {}   # pool warm paths (lazy)
         self.win_n = 0                   # completions since the last probe
         self.win_miss = 0
+        self.win_shed = 0                # sheds since the last probe
         self.win_epoch = 0               # bumps on probe reset: a reclaim
         self.streak = {"hot": 0, "cold": 0}   # only undoes its own window
         self.streak_why = "overload"     # what armed the hot streak
@@ -466,15 +597,24 @@ class GatewayResult:
         """Simulated fleet dollars (price-sheet output, DESIGN.md S1)."""
         return float(sum(self.costs.values()))
 
+    @property
+    def shed_total(self) -> int:
+        return sum(r.shed_total for r in self.per_model.values())
+
     def per_class(self) -> dict:
-        """Fleet-wide per-SLO-class stats (latencies pooled across models)."""
+        """Fleet-wide per-SLO-class stats (latencies pooled across models,
+        shed counts included)."""
         lats: dict[str, list] = {}
         miss: dict[str, int] = {}
+        shed: dict[str, int] = {}
         for r in self.per_model.values():
             for c, ls in r.class_latencies.items():
                 lats.setdefault(c, []).extend(ls)
                 miss[c] = miss.get(c, 0) + r.class_misses.get(c, 0)
-        return {c: _class_stats(ls, miss.get(c, 0))
+            for c, n in r.class_shed.items():
+                shed[c] = shed.get(c, 0) + n
+                lats.setdefault(c, [])
+        return {c: _class_stats(ls, miss.get(c, 0), shed.get(c, 0))
                 for c, ls in sorted(lats.items())}
 
     def summary(self) -> dict:
@@ -483,6 +623,8 @@ class GatewayResult:
                "models": {m: r.summary() for m, r in self.per_model.items()}}
         if self.costs:
             out["sim_cost_usd"] = round(self.total_cost_usd, 6)
+        if self.shed_total:
+            out["shed"] = self.shed_total
         pc = self.per_class()
         if pc:
             out["per_class"] = pc
@@ -508,6 +650,13 @@ class Gateway:
     replan: optional ReplanConfig enabling continuous mid-run re-planning
     (periodic probes that shift split weights; see ReplanConfig).
 
+    routing: RoutingConfig -- queue-aware weighted JSQ by default,
+    policy="weights" for the pure pre-drawn weighted draw.
+
+    admission: optional AdmissionConfig -- shed requests whose expected
+    completion already exceeds their class deadline (None = admit all,
+    the legacy behavior InferenceService relies on).
+
     record_batches=True keeps a per-batch audit trail (batch_log) and a
     per-cloud usage trace (usage_trace) for the invariant test suite.
     After run(), ``final_weights`` holds each model's normalized live
@@ -517,11 +666,15 @@ class Gateway:
     def __init__(self, *, capacity: Optional[dict] = None,
                  log: Optional[EventLog] = None,
                  replan: Optional[ReplanConfig] = None,
+                 routing: Optional[RoutingConfig] = None,
+                 admission: Optional[AdmissionConfig] = None,
                  record_batches: bool = False):
         self.deployments: dict[str, Deployment] = {}
         self.capacity = dict(capacity or {})
         self.log = log or EventLog()
         self.replan = replan
+        self.routing = routing or RoutingConfig()
+        self.admission = admission
         self.record_batches = record_batches
         self.batch_log: list = []        # dicts, one per dispatched batch
         self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
@@ -530,12 +683,16 @@ class Gateway:
     def deploy(self, name: str, backend, profile: Optional[CloudProfile] = None,
                *, split: Optional[dict] = None, autoscaler=None,
                max_batch: int = 32, canary=None, canary_fraction: float = 0.0,
-               standby: Optional[CloudProfile] = None) -> Deployment:
+               standby: Optional[CloudProfile] = None,
+               queue_hint: Optional[dict] = None) -> Deployment:
         """``profile`` places the model on one cloud (weight 1.0);
         ``split={CloudProfile: weight}`` places it active-active (weights
         must sum to 1).  With both, ``profile`` names the primary among the
         split clouds; with only a split, the largest weight is primary.
-        ``standby`` adds a zero-weight pool that failover shifts into."""
+        ``standby`` adds a zero-weight pool that failover shifts into.
+        ``queue_hint`` ({cloud: expected wait s}, e.g. the placement
+        plan's Assignment.est_wait_s) seeds queue-aware routing before a
+        pool has any queue of its own."""
         if isinstance(autoscaler, AutoscalerConfig):
             autoscaler = Autoscaler(autoscaler)
         if split:
@@ -560,9 +717,11 @@ class Gateway:
             if standby.name in [p.name for p, _ in placements]:
                 raise ValueError("standby must be a different cloud")
             placements.append((standby, 0.0))
+        hint = {c: float(w) for c, w in (queue_hint or {}).items()
+                if math.isfinite(w)}
         dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
                          max_batch, canary, canary_fraction, standby,
-                         placements)
+                         placements, hint)
         self.deployments[name] = dep
         return dep
 
@@ -609,9 +768,14 @@ class Gateway:
                         s.next_rid, warm=True)
                     s.next_rid += 1
             s.trace.append((0.0, s.total_pool()))
+            s.svc1 = dep.backend.service_time(1)
+            # amortized per-request service estimate for the routing /
+            # admission expected-completion formula: a full batch's cost
+            # split over its requests (svc(1) would overprice a batched
+            # backend and over-shed)
+            s.svc_est = dep.backend.service_time(dep.max_batch) / dep.max_batch
             s.deadline_base = (dep.profile.network_rtt_s
-                               + dep.profile.lb_overhead_s
-                               + dep.backend.service_time(1))
+                               + dep.profile.lb_overhead_s + s.svc1)
             for i, t in enumerate(arr):
                 heapq.heappush(events, (float(t), next(seq), "arr", m, i))
 
@@ -675,8 +839,9 @@ class Gateway:
                     s = st[m]
                     if kind == "arr":
                         pool = self._route(s, data)
-                        key = (int(s.ver[data]), s.cls[data].name)
-                        pool.pending.setdefault(key, []).append(data)
+                        if self._admit(s, pool, data, t):
+                            key = (int(s.ver[data]), s.cls[data].name)
+                            pool.pending.setdefault(key, []).append(data)
                         touched.add(m)
                     elif kind == "up":
                         cloud, gen, forced_cold = data
@@ -737,11 +902,14 @@ class Gateway:
         for m, s in st.items():
             if not len(s.arr):           # deployed but untrafficked: holds
                 continue                 # capacity, reports no results
-            if s.served < len(s.arr):
+            n_shed = int(s.shed.sum())
+            if s.served + n_shed < len(s.arr):
                 raise RuntimeError(
-                    f"gateway stalled: {m} served {s.served}/{len(s.arr)}")
+                    f"gateway stalled: {m} served {s.served} + shed "
+                    f"{n_shed} of {len(s.arr)}")
             totals[m] = max((float(s.arr[i] + s.lat[i])
-                             for i in range(len(s.arr))), default=0.0)
+                             for i in range(len(s.arr)) if not s.shed[i]),
+                            default=0.0)
             makespan = max(makespan, totals[m])
         for m, s in st.items():
             # bill surviving replicas to the fleet's last completion, NOT
@@ -760,13 +928,22 @@ class Gateway:
 
     def _result(self, s: _ModelState, total: float) -> ServeResult:
         dep = s.dep
-        # deadline base: the warm single-request path on the PRIMARY cloud
-        # (failover cold starts count against the same promise)
+        # REPORTED deadline base: the warm single-request path on the
+        # PRIMARY cloud.  This is the deployment-level promise per_class()
+        # publishes (a request served by a slower split cloud that beats
+        # that cloud's own path but not the primary's still counts as a
+        # miss here).  The IN-RUN accounting that drives probes and the
+        # shedder is per-pool (_pool_base) so a slow-but-honest split
+        # cloud cannot make replanning oscillate -- DESIGN.md S3.
         base = s.deadline_base
         cls_lats: dict[str, list] = {}
         cls_miss: dict[str, int] = {}
+        lats = []
         for i in range(len(s.arr)):
+            if s.shed[i]:                # shed exactly once, reported via
+                continue                 # class_shed, never in percentiles
             c = s.cls[i]
+            lats.append(float(s.lat[i]))
             cls_lats.setdefault(c.name, []).append(float(s.lat[i]))
             if s.lat[i] > c.deadline_mult * base:
                 cls_miss[c.name] = cls_miss.get(c.name, 0) + 1
@@ -774,17 +951,24 @@ class Gateway:
         window = float(s.arr.max() - s.arr.min()) if n > 1 else 0.0
         if window <= 1e-9:               # pure burst: fall back to the span
             window = max(total - float(s.arr.min()), 1e-9)
-        observed = {"rate_rps": n / window,
-                    "service_time_s": s.busy_s / n,
-                    "window_s": window, "n": n}
+            rate = n / window
+        else:
+            # n arrivals span n-1 inter-arrival gaps: n/window overestimates
+            # the offered rate for small n and biases replan demand upward
+            rate = (n - 1) / window
+        observed = {"rate_rps": rate,
+                    "service_time_s": s.busy_s / max(s.served, 1),
+                    "window_s": window, "n": n,
+                    "shed": int(s.shed.sum())}
         self.log.record("gateway:observed", 0.0, model=dep.name,
                         rate_rps=round(observed["rate_rps"], 4),
                         service_time_s=round(observed["service_time_s"], 8),
-                        n=n)
+                        n=n, shed=observed["shed"])
         cost_by_cloud = self._pool_costs(s)
-        return ServeResult(f"gateway:{dep.name}", n, total, s.lat.tolist(),
+        return ServeResult(f"gateway:{dep.name}", n, total, lats,
                            s.trace, per_version=s.per_version,
                            class_latencies=cls_lats, class_misses=cls_miss,
+                           class_shed=dict(s.class_shed),
                            observed=observed,
                            cost_usd=sum(cost_by_cloud.values()),
                            cost_by_cloud=cost_by_cloud)
@@ -805,14 +989,61 @@ class Gateway:
             return {c: 0.0 for c in s.pools}
         return {c: p.weight / total for c, p in s.pools.items()}
 
+    def _pool_base(self, s: _ModelState, pool: _Pool) -> float:
+        """This POOL's warm single-request path (rtt + lb + svc(1)) -- the
+        deadline base for in-run miss/shed accounting (ISSUE 4 bugfix:
+        charging every pool against the PRIMARY's warm path made a slow
+        split cloud look like a miss storm and replan probes oscillate).
+        Cached lazily: migrations open pools mid-run."""
+        cloud = pool.profile.name
+        base = s.base_by_cloud.get(cloud)
+        if base is None:
+            base = s.base_by_cloud[cloud] = (
+                pool.profile.network_rtt_s + pool.profile.lb_overhead_s
+                + s.svc1)
+        return base
+
+    def _expected_wait(self, s: _ModelState, pool: _Pool) -> float:
+        """Expected seconds until a request joining ``pool`` NOW completes:
+        queue depth x amortized service estimate over the pool's replicas,
+        plus the cloud's rtt/lb constants, plus cold-start risk: a pool
+        with NO replicas must first spin one up (control-plane delay +
+        model load).  A provisioned-but-cold pool is NOT penalized -- its
+        model_load_s is a one-time cost the first batch amortizes, and
+        charging it per decision would keep a freshly migrated-to pool
+        cold forever.  A deployment-supplied queue_hint (planner prior)
+        floors the wait while the pool has no queue of its own.  A coarse
+        ranking estimate, deliberately -- the simulation is the ground
+        truth; this only has to order pools and spot hopeless deadlines."""
+        size = pool.size()
+        wait = (pool.queue_len() + 1) * s.svc_est / max(size, 1)
+        if pool.queue_len() == 0:
+            wait = max(wait, s.dep.queue_hint.get(pool.profile.name, 0.0))
+        e = wait + pool.profile.network_rtt_s + pool.profile.lb_overhead_s
+        if size == 0:
+            e += (s.dep.autoscaler.cfg.scale_up_delay_s
+                  + pool.profile.model_load_s)
+        return e
+
     def _route(self, s: _ModelState, i: int) -> _Pool:
-        """Deterministic weighted choice: the request's pre-drawn uniform
-        against the LIVE weights (declared pool order).  With every weight
-        at zero (full outage, no standby) requests wait on the primary."""
+        """Blended queue-aware routing (RoutingConfig): live pools within
+        ``slack`` of the best expected completion form the candidate band;
+        the request's pre-drawn uniform resolves a weighted draw over the
+        band (declared pool order), so a fixed seed stays bit-for-bit
+        deterministic however queues and weights move.  policy="weights"
+        skips the band (pure weighted draw, the pre-ISSUE-4 behavior).
+        With every weight at zero (full outage, no standby) requests wait
+        on the primary."""
         live = [(c, p) for c, p in s.pools.items() if p.weight > 0]
         total = sum(p.weight for _, p in live)
         if total <= 0:
             return s.pools[s.dep.profile.name]
+        if self.routing.policy == "queue_aware" and len(live) > 1:
+            scored = [(self._expected_wait(s, p), c, p) for c, p in live]
+            band = (min(e for e, _, _ in scored)
+                    * (1.0 + self.routing.slack) + 1e-12)
+            live = [(c, p) for e, c, p in scored if e <= band]
+            total = sum(p.weight for _, p in live)
         u = float(s.route_u[i]) * total
         acc = 0.0
         for c, p in live:
@@ -820,6 +1051,55 @@ class Gateway:
             if u < acc:
                 return p
         return live[-1][1]
+
+    # -- admission control (shedding) ---------------------------------------
+    def _admit(self, s: _ModelState, pool: _Pool, i: int, t: float) -> bool:
+        """Enqueue-time admission: shed the request (exactly once) when its
+        expected completion already exceeds margin x the class deadline,
+        measured against the SERVING pool's own warm path."""
+        adm = self.admission
+        if adm is None:
+            return True
+        c = s.cls[i]
+        if not c.sheddable or not math.isfinite(c.deadline_mult):
+            return True
+        deadline = adm.margin * c.deadline_mult * self._pool_base(s, pool)
+        if t + self._expected_wait(s, pool) <= float(s.arr[i]) + deadline:
+            return True
+        self._shed(s, pool, i, t, where="enqueue")
+        return False
+
+    def _shed(self, s: _ModelState, pool: _Pool, i: int, t: float, *,
+              where: str) -> None:
+        c = s.cls[i]
+        s.shed[i] = True
+        s.class_shed[c.name] = s.class_shed.get(c.name, 0) + 1
+        s.win_shed += 1
+        pool.shed_pressure += 1
+        self.log.record("gateway:shed", 0.0, model=s.dep.name,
+                        cloud=pool.profile.name, cls=c.name, idx=int(i),
+                        t_sim=round(t, 6), at=where)
+
+    def _prune_hopeless(self, s: _ModelState, pool: _Pool, t: float) -> None:
+        """Dispatch-time re-check: shed queued requests whose BEST-CASE
+        completion (dispatched right now, warm, batch of one) already
+        breaches margin x deadline.  Queues are FIFO by arrival, so the
+        hopeless requests form a prefix."""
+        adm = self.admission
+        if adm is None or not adm.recheck_at_dispatch:
+            return
+        base = self._pool_base(s, pool)
+        best = t + base                  # rtt + lb + svc(1) from now
+        for key in list(pool.pending):
+            q = pool.pending[key]
+            if not q:
+                continue
+            c = s.slo_by_name[key[1]]
+            if not c.sheddable or not math.isfinite(c.deadline_mult):
+                continue
+            deadline = adm.margin * c.deadline_mult * base
+            while q and best > float(s.arr[q[0]]) + deadline:
+                self._shed(s, pool, q.pop(0), t, where="dispatch")
 
     # -- dispatch -----------------------------------------------------------
     def _best_queue(self, s: _ModelState, pool: _Pool, keys: list,
@@ -839,6 +1119,7 @@ class Gateway:
 
     def _dispatch_pool(self, s: _ModelState, pool: _Pool, t: float,
                        events, seq) -> None:
+        self._prune_hopeless(s, pool, t)
         while True:
             keys = [k for k, q in pool.pending.items() if q]
             if not keys:
@@ -887,9 +1168,13 @@ class Gateway:
         svc = backend.service_time(b)
         done = (t + pool.profile.network_rtt_s + pool.profile.lb_overhead_s
                 + cold + svc)
+        # in-run miss window: charge against the SERVING pool's own warm
+        # path, not the primary's (per-pool promise; the primary-relative
+        # one is reported post-run in per_class) -- ISSUE 4 bugfix
+        pool_base = self._pool_base(s, pool)
         for i in take:
             s.lat[i] = done - s.arr[i]
-            if s.lat[i] > s.cls[i].deadline_mult * s.deadline_base:
+            if s.lat[i] > s.cls[i].deadline_mult * pool_base:
                 s.win_miss += 1
         s.win_n += b
         s.served += b
@@ -928,9 +1213,10 @@ class Gateway:
         # probe window; a pre-reset batch was already flushed with its
         # window and must not distort this one
         undo_window = fl["win_epoch"] == s.win_epoch
+        pool_base = self._pool_base(s, pool)     # mirror _assign's charge
         for i in take:
             if undo_window and s.lat[i] > s.cls[i].deadline_mult \
-                    * s.deadline_base:
+                    * pool_base:
                 s.win_miss -= 1
             s.lat[i] = -1.0
         if undo_window:
@@ -1052,6 +1338,11 @@ class Gateway:
             if update_nominal:
                 pool.nominal = w
             pool.weight = 0.0 if c in down else w
+            if pool.weight <= 0:
+                # the shed demand re-routes with the backlog: stale
+                # pressure on a drained pool must not trigger a phantom
+                # scale-from-zero launch later
+                pool.shed_pressure = 0
         floors = _apportion(dep.autoscaler.cfg.min_replicas,
                             {c: p.weight for c, p in s.pools.items()})
         requeued = 0
@@ -1143,11 +1434,14 @@ class Gateway:
 
     def _pool_overloaded(self, s: _ModelState, pool: _Pool) -> bool:
         """ReplanConfig overload rule, shared by the blocked detection and
-        the destination filter so the two can never drift apart."""
+        the destination filter so the two can never drift apart.  Counts
+        shed-pressure as queue depth: a pool shedding hard keeps a short
+        queue, but it is still overloaded."""
         cfg = self.replan
-        return pool.queue_len() > (cfg.overload_factor
-                                   * s.dep.autoscaler.cfg.target_queue
-                                   * max(pool.size(), 1))
+        q = s.dep.autoscaler.effective_queue(pool.queue_len(),
+                                             pool.shed_pressure)
+        return q > (cfg.overload_factor * s.dep.autoscaler.cfg.target_queue
+                    * max(pool.size(), 1))
 
     def _probe(self, st, t, events, seq, down) -> set:
         """One auto-replan check over every model (ReplanConfig)."""
@@ -1161,7 +1455,7 @@ class Gateway:
             live = [(c, p) for c, p in s.pools.items() if p.weight > 0]
             if not live:
                 s.streak["hot"] = s.streak["cold"] = 0
-                s.win_n = s.win_miss = 0
+                s.win_n = s.win_miss = s.win_shed = 0
                 s.win_epoch += 1
                 continue
             asc = s.dep.autoscaler
@@ -1171,21 +1465,32 @@ class Gateway:
                 and self._pool_headroom(st, s, p, down) <= 0]
             miss = (s.win_n >= cfg.min_window_n
                     and s.win_miss / s.win_n > cfg.max_miss_rate)
+            # shedding is an overload signal, never a mask: a window shed
+            # rate over budget arms the same shift as a miss-rate breach
+            offered = s.win_n + s.win_shed
+            shed_hot = (offered >= cfg.min_window_n
+                        and s.win_shed / offered > cfg.max_shed_rate)
+            was_shedding = s.win_shed > 0
             # the window is consumed by THIS probe whatever it decides --
             # an aborted shift (no destination) must not leak completions
-            # into the next window
-            s.win_n = s.win_miss = 0
+            # into the next window.  Pool shed-pressure is window-scoped
+            # too once probes are running (launches also clear it).
+            s.win_n = s.win_miss = s.win_shed = 0
             s.win_epoch += 1
-            if blocked or miss:
+            for _, p in live:
+                p.shed_pressure = 0
+            if blocked or miss or shed_hot:
                 s.streak["hot"] += 1
                 s.streak["cold"] = 0
                 # remember what ARMED the trigger: the firing probe's own
                 # flags may differ from what built the streak
-                s.streak_why = "overload" if blocked else "miss_rate"
+                s.streak_why = ("overload" if blocked
+                                else "miss_rate" if miss else "shed_rate")
             else:
                 s.streak["hot"] = 0
                 idle_split = (cfg.consolidate and len(live) > 1
                               and s.queue_len() == 0
+                              and not was_shedding
                               and not any(r.busy
                                           for _, p in live
                                           for r in p.replicas.values()))
@@ -1293,7 +1598,11 @@ class Gateway:
         cfg = s.dep.autoscaler.cfg
         budget = max(cfg.max_replicas, cfg.min_replicas)
         for pool in s.pools.values():
-            q = pool.queue_len()
+            # shed-pressure counts as queue depth: demand that admission
+            # control dropped is still demand, and must drive scale-up
+            # rather than be masked by the now-short queue
+            q = s.dep.autoscaler.effective_queue(pool.queue_len(),
+                                                 pool.shed_pressure)
             if q > 0 and pool.size() == 0:   # scale from zero: spin up one
                 if s.total_pool() >= budget:
                     # queued work is pinned to THIS pool (routing moves only
@@ -1346,6 +1655,7 @@ class Gateway:
                             model=s.dep.name, cloud=cloud, t_sim=round(t, 6))
         delay = s.dep.autoscaler.cfg.scale_up_delay_s
         pool.scheduled_up += 1
+        pool.shed_pressure = 0           # the overload signal did its job
         s.trace.append((t, s.total_pool()))
         self._note_usage(st, cloud, t)
         heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name,

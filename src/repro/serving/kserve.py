@@ -29,8 +29,9 @@ import numpy as np
 from ..clouds.profiles import CloudProfile
 from ..telemetry.events import EventLog
 from .gateway.autoscaler import AutoscalerConfig
-from .gateway.router import (Gateway, Predictor, ServeResult,  # noqa: F401
-                             TrafficSpec, _pow2, jax_block)
+from .gateway.router import (AdmissionConfig, Gateway,  # noqa: F401
+                             Predictor, ServeResult, TrafficSpec, _pow2,
+                             jax_block)
 
 
 class InferenceService:
@@ -39,6 +40,7 @@ class InferenceService:
                  min_replicas: int = 1, max_replicas: int = 4,
                  target_queue: int = 16, scale_up_delay_s: float = 0.5,
                  canary: Optional[Predictor] = None, canary_fraction: float = 0.0,
+                 admission: Optional[AdmissionConfig] = None,
                  log: Optional[EventLog] = None):
         assert strategy in ("baremetal", "k8s", "kserve")
         self.predictor = predictor
@@ -51,6 +53,9 @@ class InferenceService:
         self.scale_up_delay_s = scale_up_delay_s
         self.canary = canary
         self.canary_fraction = canary_fraction
+        self.admission = admission       # pass-through: deadline-hopeless
+        # requests shed at the gateway (kserve strategy only; the
+        # sequential baselines admit everything by construction)
         self.log = log or EventLog()
 
     # -- the paper's stress test -------------------------------------------
@@ -104,7 +109,7 @@ class InferenceService:
                                target_queue=self.target_queue,
                                scale_up_delay_s=self.scale_up_delay_s,
                                idle_window_s=math.inf, cold_scale_up=False)
-        gw = Gateway(log=self.log)
+        gw = Gateway(log=self.log, admission=self.admission)
         gw.deploy(self.predictor.name, self.predictor, self.profile,
                   autoscaler=cfg, max_batch=self.max_batch,
                   canary=self.canary, canary_fraction=self.canary_fraction)
@@ -116,6 +121,7 @@ class InferenceService:
                            per_version=res.per_version,
                            class_latencies=res.class_latencies,
                            class_misses=res.class_misses,
+                           class_shed=res.class_shed,
                            observed=res.observed,
                            cost_usd=res.cost_usd,
                            cost_by_cloud=res.cost_by_cloud)

@@ -14,6 +14,12 @@ Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
                              deployment's max_replicas (queued work is
                              pinned to a pool; starving it would stall)
   gateway:preempt            latency-class batch evicted an in-flight batch
+  gateway:shed               admission control dropped a request whose
+                             expected completion already breached its
+                             class deadline (exactly once per request;
+                             carries model/cloud/cls/idx and at=enqueue
+                             or at=dispatch; sheddable classes only --
+                             batch work is deferred, never shed)
   gateway:split              a model's live split weights changed (carries
                              the normalized {cloud: weight} map, which sums
                              to 1 unless every cloud is down; reasons:
@@ -21,7 +27,8 @@ Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
   gateway:migrate            a re-planning decision: an explicit
                              MigrationSpec step (reason=plan) or an
                              auto-replan shift (reason=overload /
-                             miss_rate / cost, with src/dst/delta)
+                             miss_rate / shed_rate / cost, with
+                             src/dst/delta)
   gateway:failover/recover   outage edge as seen by one deployment -- the
                              degenerate split (dead cloud's weight -> 0,
                              restored on recovery)

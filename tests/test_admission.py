@@ -1,0 +1,354 @@
+"""Queue-aware split routing + per-class admission control (ISSUE 4):
+the weighted-JSQ routing blend, deadline-hopeless shedding (exactly once,
+batch never shed, shed-rate as an overload signal), and the three
+satellite regression suites -- per-pool deadline bases (a slow split
+cloud must not fake a miss storm), the `_apportion` min-1 floor for
+live-weight pools, and the (n-1)/window observed arrival rate."""
+import math
+
+import pytest
+
+from repro.clouds.profiles import TPU_V5E, CloudProfile, get_profile
+from repro.serving.gateway import (AdmissionConfig, AutoscalerConfig,
+                                   Gateway, ReplanConfig, RoutingConfig,
+                                   SLOClass, TrafficSpec)
+from repro.serving.gateway.router import _apportion
+from repro.telemetry.events import EventLog
+
+from conftest import AnalyticBackend
+
+
+def warm_config(**kw):
+    return AutoscalerConfig(min_replicas=kw.pop("min_replicas", 1),
+                            idle_window_s=kw.pop("idle_window_s", math.inf),
+                            **kw)
+
+
+def split_gcp_ibm(f_ibm):
+    return {get_profile("gcp"): 1.0 - f_ibm, get_profile("ibm"): f_ibm}
+
+
+# -- queue-aware routing (the tentpole blend) ---------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        RoutingConfig(policy="jsq")
+    with pytest.raises(ValueError, match="slack"):
+        RoutingConfig(slack=-0.1)
+    with pytest.raises(ValueError, match="margin"):
+        AdmissionConfig(margin=0.0)
+    with pytest.raises(ValueError, match="max_shed_rate"):
+        ReplanConfig(max_shed_rate=0.0)
+
+
+def _stale_weights_fleet(routing):
+    """0.9/0.1 declared split over EQUAL 1+1 replica pools: the weights
+    are stale relative to capacity, the canonical queue-aware win."""
+    gw = Gateway(record_batches=True, routing=routing)
+    gw.deploy("m", AnalyticBackend("m", base_s=0.1), split=split_gcp_ibm(0.1),
+              autoscaler=warm_config(min_replicas=2, max_replicas=2),
+              max_batch=1)
+    return gw
+
+
+def test_queue_aware_drains_to_idle_sibling_pool():
+    """Pure weights sends ~90% of a burst into one queue while the sibling
+    idles; queue-aware keeps joining the shorter expected queue, so the
+    load lands balanced and the tail collapses."""
+    traffic = [TrafficSpec("m", 40)]
+    by_policy = {}
+    for policy in ("weights", "queue_aware"):
+        gw = _stale_weights_fleet(RoutingConfig(policy=policy))
+        out = gw.run(traffic, seed=0)
+        per_cloud = {}
+        for rec in gw.batch_log:
+            per_cloud[rec["cloud"]] = per_cloud.get(rec["cloud"], 0) \
+                + len(rec["idx"])
+        by_policy[policy] = (out.per_model["m"].p99, per_cloud)
+    p99_w, cloud_w = by_policy["weights"]
+    p99_q, cloud_q = by_policy["queue_aware"]
+    assert cloud_w.get("ibm", 0) < 10        # stale weights starve ibm
+    assert cloud_q["ibm"] >= 15              # JSQ balances 1:1 capacity
+    assert abs(cloud_q["gcp"] - cloud_q["ibm"]) <= 6
+    assert p99_q < p99_w                     # the point of the blend
+
+
+def test_queue_aware_respects_weights_when_balanced():
+    """With balanced pools (service time comparable to the network
+    constants, no backlog) every candidate stays in the slack band, so
+    the declared weights still set the split (the bias half of the
+    blend).  An ultra-fast backend would instead strictly prefer the
+    lower-RTT cloud -- that dominance is by design."""
+    gw = Gateway(record_batches=True)
+    gw.deploy("m", AnalyticBackend("m", base_s=0.05),
+              split=split_gcp_ibm(0.3),
+              autoscaler=warm_config(min_replicas=2, max_replicas=2),
+              max_batch=8)
+    gw.run([TrafficSpec("m", 300, arrival="poisson", rate=10.0)], seed=3)
+    share = sum(len(r["idx"]) for r in gw.batch_log
+                if r["cloud"] == "ibm") / 300
+    assert 0.2 < share < 0.45
+
+
+def test_queue_aware_routing_is_deterministic():
+    traffic = [TrafficSpec("m", 60, arrival="poisson", rate=120.0),
+               TrafficSpec("m", 20, slo="latency", start_s=0.1)]
+    runs = []
+    for _ in range(2):
+        gw = _stale_weights_fleet(RoutingConfig())
+        out = gw.run(traffic, seed=7)
+        runs.append((out.summary(),
+                     [(r["cloud"], r["idx"]) for r in gw.batch_log]))
+    assert runs[0] == runs[1]
+
+
+def test_queue_hint_biases_first_arrivals_off_congested_plan():
+    """A planner expected-queue hint steers traffic before any real queue
+    exists: with a huge hint on gcp, the first burst lands on ibm."""
+    gw = Gateway(record_batches=True)
+    gw.deploy("m", AnalyticBackend("m", base_s=0.01),
+              split=split_gcp_ibm(0.5),
+              autoscaler=warm_config(min_replicas=2, max_replicas=2),
+              max_batch=4, queue_hint={"gcp": 5.0})
+    gw.run([TrafficSpec("m", 4)], seed=0)
+    first = min(gw.batch_log, key=lambda r: (r["start_s"], min(r["idx"])))
+    assert first["cloud"] == "ibm"
+
+
+# -- admission control / shedding ---------------------------------------------
+
+def _hopeless(margin=1.0, **deploy_kw):
+    """One slow replica, max_batch=1: a burst's tail is deadline-hopeless
+    for the latency class the moment the queue is a few deep."""
+    log = EventLog()
+    gw = Gateway(log=log, record_batches=True,
+                 admission=AdmissionConfig(margin=margin))
+    gw.deploy("m", AnalyticBackend("m", base_s=0.2), get_profile("gcp"),
+              autoscaler=deploy_kw.pop(
+                  "autoscaler", warm_config(max_replicas=1)),
+              max_batch=1, **deploy_kw)
+    return gw, log
+
+
+def test_hopeless_requests_shed_exactly_once_and_reported():
+    gw, log = _hopeless()
+    out = gw.run([TrafficSpec("m", 30, slo="latency")], seed=0)
+    res = out.per_model["m"]
+    sheds = log.named("gateway:shed")
+    assert sheds, "an overloaded burst must shed"
+    idx = [e["idx"] for e in sheds]
+    assert len(idx) == len(set(idx))                 # exactly once
+    assert res.n_requests == 30                      # offered
+    assert len(res.latencies_s) == 30 - len(idx)     # percentiles exclude
+    assert res.shed_total == len(idx)
+    assert res.class_shed == {"latency": len(idx)}
+    served = sorted(i for rec in gw.batch_log if not rec["preempted"]
+                    for i in rec["idx"])
+    assert sorted(served + idx) == list(range(30))   # complete xor shed
+    pc = res.per_class()["latency"]
+    assert pc["shed"] == len(idx)
+    assert pc["shed_rate"] == pytest.approx(len(idx) / 30, abs=1e-4)
+    assert 0 < res.shed_rate < 1
+    assert out.shed_total == res.shed_total
+    assert "shed" in res.summary() and "shed" in out.summary()
+    # every survivor really was servable inside margin x deadline
+    assert all(l > 0 for l in res.latencies_s)
+
+
+def test_batch_class_is_deferred_never_shed():
+    gw, log = _hopeless()
+    out = gw.run([TrafficSpec("m", 30, slo="batch"),
+                  TrafficSpec("m", 10, slo="latency", start_s=0.01)],
+                 seed=0)
+    res = out.per_model["m"]
+    assert res.class_shed.get("batch", 0) == 0
+    assert len(res.class_latencies["batch"]) == 30   # all complete, late
+    assert all(e["cls"] != "batch" for e in log.named("gateway:shed"))
+
+
+def test_infinite_deadline_class_never_shed():
+    gw, log = _hopeless()
+    out = gw.run([TrafficSpec("m", 30,
+                              slo=SLOClass("lazy", 1.0, math.inf))], seed=0)
+    assert log.count("gateway:shed") == 0
+    assert out.per_model["m"].shed_total == 0
+
+
+def test_admission_off_is_legacy_behavior():
+    gw = Gateway()
+    gw.deploy("m", AnalyticBackend("m", base_s=0.2), get_profile("gcp"),
+              autoscaler=warm_config(max_replicas=1), max_batch=1)
+    res = gw.run([TrafficSpec("m", 30, slo="latency")],
+                 seed=0).per_model["m"]
+    assert res.shed_total == 0 and res.class_shed == {}
+    assert len(res.latencies_s) == 30
+    assert "shed" not in res.summary()
+
+
+def test_dispatch_recheck_sheds_aged_backlog():
+    """Requests admitted on an optimistic estimate (a scheduled replica
+    counts toward pool size but serves nothing until its "up" fires) can
+    still turn hopeless in the queue: the dispatch re-check sheds them
+    with at=dispatch, and each request is still shed at most once."""
+    log = EventLog()
+    gw = Gateway(log=log, admission=AdmissionConfig())
+    gw.deploy("m", AnalyticBackend("m", base_s=0.1), get_profile("gcp"),
+              autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                          target_queue=2,
+                                          scale_up_delay_s=0.5,
+                                          idle_window_s=math.inf),
+              max_batch=1)
+    out = gw.run([TrafficSpec("m", 6, slo="latency"),
+                  TrafficSpec("m", 8, slo="latency", start_s=0.05)], seed=0)
+    sheds = log.named("gateway:shed")
+    at = {e["at"] for e in sheds}
+    assert at == {"enqueue", "dispatch"}
+    idx = [e["idx"] for e in sheds]
+    assert len(idx) == len(set(idx))
+    assert len(out.per_model["m"].latencies_s) == 14 - len(idx)
+
+
+def test_shedding_triggers_scale_up_not_masking():
+    """Shed-pressure counts as queue depth for the KPA rule: a pool whose
+    queue stays short only BECAUSE it sheds must still scale up."""
+    log = EventLog()
+    gw = Gateway(log=log, admission=AdmissionConfig())
+    gw.deploy("m", AnalyticBackend("m", base_s=0.2), get_profile("gcp"),
+              autoscaler=AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                          target_queue=2,
+                                          scale_up_delay_s=0.05,
+                                          idle_window_s=math.inf),
+              max_batch=1)
+    gw.run([TrafficSpec("m", 40, slo="latency")], seed=0)
+    assert log.count("gateway:shed") > 0
+    assert log.count("gateway:scale_up") >= 1, \
+        "shedding masked the overload from the autoscaler"
+
+
+def test_probe_treats_shed_rate_as_overload_signal():
+    """A pool serving inside its queue bound but shedding a class whose
+    deadline it cannot meet must still shift weight away
+    (gateway:migrate reason=shed_rate)."""
+    log = EventLog()
+    gw = Gateway(log=log, admission=AdmissionConfig(),
+                 replan=ReplanConfig(check_every_s=0.1, sustain=2,
+                                     min_window_n=4, max_shed_rate=0.1,
+                                     consolidate=False))
+    # standard traffic completes comfortably; the strict class is hopeless
+    # on ibm (deadline < even an empty-queue pass) -> pure shed signal,
+    # no queue overload, no completion misses
+    strict = SLOClass("strict", weight=4.0, deadline_mult=0.5)
+    gw.deploy("m", AnalyticBackend("m", base_s=0.2), get_profile("ibm"),
+              standby=get_profile("gcp"),
+              autoscaler=warm_config(max_replicas=2, target_queue=64),
+              max_batch=8)
+    out = gw.run([TrafficSpec("m", 30, arrival="poisson", rate=40.0),
+                  TrafficSpec("m", 30, slo=strict,
+                              arrival="poisson", rate=40.0)], seed=0)
+    migs = log.named("gateway:migrate")
+    assert migs and migs[0]["reason"] == "shed_rate", migs
+    assert migs[0]["src"] == "ibm" and migs[0]["dst"] == "gcp"
+    assert out.per_model["m"].class_shed.get("strict", 0) > 0
+
+
+# -- satellite 1: per-pool deadline bases -------------------------------------
+
+SLOW = CloudProfile("slowcloud", TPU_V5E, (1, 1),
+                    network_rtt_s=0.5, lb_overhead_s=0.0,
+                    model_load_s=0.2, startup_s=1.0, cost_per_s=0.9 / 3600)
+
+
+def test_slow_split_cloud_does_not_oscillate_replan():
+    """Regression (ISSUE 4): the in-run miss window used to charge every
+    pool against the PRIMARY cloud's warm path, so a cheap-but-slow split
+    cloud looked like a 50% miss storm and ReplanConfig probes shifted
+    weight away for ever.  Misses must be charged per serving pool."""
+    log = EventLog()
+    gw = Gateway(log=log, routing=RoutingConfig(policy="weights"),
+                 replan=ReplanConfig(check_every_s=0.25, sustain=2,
+                                     max_miss_rate=0.3, consolidate=False))
+    gw.deploy("m", AnalyticBackend("m", base_s=0.01),
+              split={get_profile("gcp"): 0.5, SLOW: 0.5},
+              autoscaler=warm_config(min_replicas=2, max_replicas=4),
+              max_batch=8)
+    out = gw.run([TrafficSpec("m", 120, arrival="poisson", rate=50.0)],
+                 seed=0)
+    assert out.per_model["m"].n_requests == 120
+    assert log.named("gateway:migrate") == [], \
+        "slow-but-honest split cloud must not trigger miss_rate replans"
+    assert gw.final_weights["m"] == {"gcp": 0.5, "slowcloud": 0.5}
+    # the REPORTED promise stays primary-relative (documented): requests
+    # served by the slow cloud still count as misses in per_class()
+    assert out.per_model["m"].per_class()["standard"]["miss_rate"] > 0.2
+
+
+def test_shedder_uses_serving_pools_own_base():
+    """The slow cloud's own warm path is ~0.5s; with admission on, its
+    requests must NOT be shed against the fast primary's ~12ms deadline
+    (standard: 20x base) when its queue is empty."""
+    gw = Gateway(routing=RoutingConfig(policy="weights"),
+                 admission=AdmissionConfig())
+    gw.deploy("m", AnalyticBackend("m", base_s=0.01),
+              split={get_profile("gcp"): 0.5, SLOW: 0.5},
+              autoscaler=warm_config(min_replicas=2, max_replicas=4),
+              max_batch=8)
+    out = gw.run([TrafficSpec("m", 60, arrival="poisson", rate=20.0)],
+                 seed=0)
+    assert out.per_model["m"].shed_total == 0
+
+
+# -- satellite 2: _apportion min-1 floor --------------------------------------
+
+def test_apportion_min1_floor_for_live_pools():
+    """Regression (ISSUE 4): a 0.95/0.05 split at total=2 floored the
+    low-weight pool at ZERO replicas while routing still sent it traffic."""
+    assert _apportion(2, {"a": 0.95, "b": 0.05}) == {"a": 1, "b": 1}
+    assert _apportion(3, {"a": 0.95, "b": 0.05}) == {"a": 2, "b": 1}
+    # total < live pools: no floor to give -- largest weight wins
+    assert _apportion(1, {"a": 0.95, "b": 0.05}) == {"a": 1, "b": 0}
+    # zero-weight pools are never floored
+    assert _apportion(2, {"a": 0.9, "b": 0.1, "standby": 0.0}) == \
+        {"a": 1, "b": 1, "standby": 0}
+    # plenty of replicas: plain largest-remainder is untouched
+    assert _apportion(20, {"a": 0.95, "b": 0.05}) == {"a": 19, "b": 1}
+    assert _apportion(0, {"a": 1.0}) == {"a": 0}
+
+
+def test_low_weight_pool_serves_immediately_at_small_replica_counts():
+    """End-to-end: min_replicas=2 over a 0.95/0.05 split must give the
+    5% pool a warm replica, so its share of a burst is served without
+    waiting for an autoscaler round-trip."""
+    gw = Gateway(record_batches=True, routing=RoutingConfig("weights"))
+    gw.deploy("m", AnalyticBackend("m", base_s=0.05),
+              split=split_gcp_ibm(0.05),
+              autoscaler=warm_config(min_replicas=2, max_replicas=2),
+              max_batch=8)
+    out = gw.run([TrafficSpec("m", 100)], seed=4)
+    assert out.per_model["m"].n_requests == 100
+    ibm_first = min(r["start_s"] for r in gw.batch_log
+                    if r["cloud"] == "ibm")
+    assert ibm_first == 0.0, "ibm floor replica must serve the burst at t=0"
+
+
+# -- satellite 3: observed arrival rate ---------------------------------------
+
+def test_observed_rate_counts_intervals_not_arrivals():
+    """Regression (ISSUE 4): n arrivals span n-1 gaps; rate_rps used to be
+    n/window, overestimating small-n demand and biasing replan upward."""
+    gw = Gateway()
+    gw.deploy("m", AnalyticBackend("m", base_s=0.001), get_profile("gcp"),
+              autoscaler=warm_config(), max_batch=4)
+    out = gw.run([TrafficSpec("m", 4, arrivals=[0.0, 1.0, 2.0, 3.0])])
+    obs = out.per_model["m"].observed
+    assert obs["window_s"] == pytest.approx(3.0)
+    assert obs["rate_rps"] == pytest.approx(1.0)     # was 4/3
+
+
+def test_observed_rate_burst_fallback_unchanged():
+    gw = Gateway()
+    gw.deploy("m", AnalyticBackend("m", base_s=0.01), get_profile("gcp"),
+              autoscaler=warm_config(), max_batch=8)
+    out = gw.run([TrafficSpec("m", 16)])             # pure burst at t=0
+    obs = out.per_model["m"].observed
+    assert obs["rate_rps"] == pytest.approx(16 / obs["window_s"])
+    assert obs["rate_rps"] > 0

@@ -1,20 +1,27 @@
 """Property-based invariants over random gateway fleets, traffic mixes,
-failure injections, active-active splits and live migrations (ISSUE 2
-archetype suite, extended to active-active by ISSUE 3).
+failure injections, active-active splits, live migrations (ISSUE 2
+archetype suite, extended to active-active by ISSUE 3) and queue-aware
+routing + per-class admission control (ISSUE 4).
 
-Five invariants, checked over randomly drawn scenarios:
+Six invariants, checked over randomly drawn scenarios:
 
-  1. every request completes EXACTLY once, even when preemption, cloud
-     failover and mid-run live migration re-queue in-flight batches;
+  1. every request completes EXACTLY once OR is shed exactly once (with a
+     matching gateway:shed event), even when preemption, cloud failover
+     and mid-run live migration re-queue in-flight batches;
+     served + shed == offered, and ``batch``-class work is never shed;
   2. simulated time is monotonic per replica -- batches on one replica never
      overlap (a preempted batch ends at its preemption time);
   3. shared per-cloud capacity caps are never exceeded, except the
      documented scale-from-zero breach (gateway:capacity_exceeded);
   4. a fixed seed makes Gateway.run bit-for-bit deterministic (identical
-     summary dict and event-name sequence on a rebuilt gateway);
+     summary dict and event-name sequence on a rebuilt gateway) under
+     BOTH routing policies and with admission control on or off;
   5. split weights always normalize to 1: every gateway:split event and the
      post-run final_weights map sum to 1 per model (0 only while every
-     cloud of a deployment is down).
+     cloud of a deployment is down);
+  6. shed bookkeeping is consistent: per-class shed counts match the
+     event log, shed requests are excluded from latency percentiles, and
+     with admission off nothing is ever shed.
 
 The scenario space is described once (``scenario``) and driven two ways:
 via hypothesis when it is installed (requirements-dev.txt; CI pins
@@ -28,8 +35,9 @@ import numpy as np
 import pytest
 
 from repro.clouds.profiles import get_profile
-from repro.serving.gateway import (AutoscalerConfig, FailureSpec, Gateway,
-                                   MigrationSpec, ReplanConfig, TrafficSpec)
+from repro.serving.gateway import (AdmissionConfig, AutoscalerConfig,
+                                   FailureSpec, Gateway, MigrationSpec,
+                                   ReplanConfig, RoutingConfig, TrafficSpec)
 from repro.telemetry.events import EventLog
 
 from conftest import AnalyticBackend
@@ -83,13 +91,18 @@ def scenario(pick_int, pick_choice, pick_float):
     return {"models": models, "traffic": traffic, "failure": failure,
             "migration": migration,
             "replan": pick_choice((True, False)),
+            "routing": pick_choice(("queue_aware", "weights")),
+            "admission": pick_choice((None, 1.0, 1.5)),   # shed margin
             "capacity": capacity, "seed": pick_int(0, 2 ** 16)}
 
 
 def build(p):
     gw = Gateway(capacity=p["capacity"], log=EventLog(), record_batches=True,
                  replan=(ReplanConfig(check_every_s=0.2, sustain=2)
-                         if p["replan"] else None))
+                         if p["replan"] else None),
+                 routing=RoutingConfig(policy=p["routing"]),
+                 admission=(AdmissionConfig(margin=p["admission"])
+                            if p["admission"] else None))
     for m in p["models"]:
         other = CLOUDS[1 - CLOUDS.index(m["cloud"])]
         backend = AnalyticBackend(m["name"], m["base_ms"] / 1e3,
@@ -136,17 +149,36 @@ def run_and_check(p):
     for t in p["traffic"]:
         want[t["model"]] = want.get(t["model"], 0) + t["n"]
 
-    # 1. exactly-once completion, even under preemption + failover
+    # 1. + 6. every request completes exactly once OR is shed exactly once
+    #    (matching gateway:shed event); served + shed == offered; batch
+    #    never shed; shed excluded from percentiles but reported
     for m, n in want.items():
         res = out.per_model[m]
         assert res.n_requests == n
-        assert len(res.latencies_s) == n
+        shed_idx = sorted(e["idx"] for e in gw.log.named("gateway:shed")
+                          if e["model"] == m)
+        assert len(shed_idx) == len(set(shed_idx)), "shed more than once"
+        if p["admission"] is None:
+            assert shed_idx == [] and res.shed_total == 0
+        assert res.shed_total == len(shed_idx)
+        assert sum(res.class_shed.values()) == len(shed_idx)
+        assert res.class_shed.get("batch", 0) == 0, "batch must defer"
+        by_cls = {}
+        for e in gw.log.named("gateway:shed"):
+            if e["model"] == m:
+                by_cls[e["cls"]] = by_cls.get(e["cls"], 0) + 1
+        assert by_cls == res.class_shed
+        assert len(res.latencies_s) == n - len(shed_idx)
         assert all(l > 0 for l in res.latencies_s)
-        assert sum(res.per_version.values()) == n
+        assert sum(res.per_version.values()) == n - len(shed_idx)
         served = sorted(i for rec in gw.batch_log
                         if rec["model"] == m and not rec["preempted"]
                         for i in rec["idx"])
-        assert served == list(range(n)), f"{m}: served {served}"
+        assert sorted(served + shed_idx) == list(range(n)), \
+            f"{m}: served {served} shed {shed_idx}"
+        pc = res.per_class()
+        assert sum(st["shed"] for st in pc.values()) == len(shed_idx)
+        assert sum(st["n"] for st in pc.values()) == n - len(shed_idx)
 
     # 2. monotonic per-replica time: completed and preempted batches on one
     #    replica never overlap

@@ -10,9 +10,9 @@ from repro.clouds.profiles import get_profile
 from repro.serving.gateway import (Autoscaler, AutoscalerConfig,
                                    CloudCapacity, FailureSpec, Gateway,
                                    MigrationSpec, MigrationStep, ModelDemand,
-                                   PoolView, ReplanConfig, TrafficSpec,
-                                   diff_plans, plan_placement, replan,
-                                   replicas_needed)
+                                   PoolView, ReplanConfig, RoutingConfig,
+                                   TrafficSpec, diff_plans, plan_placement,
+                                   replan, replicas_needed)
 from repro.telemetry.events import EventLog
 
 from conftest import AnalyticBackend
@@ -31,7 +31,10 @@ def split_gcp_ibm(f_ibm):
 # -- split routing ------------------------------------------------------------
 
 def test_split_routes_by_weight_and_charges_per_cloud():
-    gw = Gateway(record_batches=True)
+    # policy="weights" pins the pure weighted-draw contract this test is
+    # about; the queue-aware blend's share behavior is covered by
+    # tests/test_admission.py
+    gw = Gateway(record_batches=True, routing=RoutingConfig("weights"))
     gw.deploy("m", AnalyticBackend("m"), split=split_gcp_ibm(0.3),
               autoscaler=warm_config(min_replicas=2), max_batch=4)
     out = gw.run([TrafficSpec("m", 400, arrival="poisson", rate=300.0)],
@@ -421,6 +424,10 @@ def test_replan_round_trip_under_split_assignments():
     assert by_model["quiet"].weights == quiet0.weights
     # observed busy load >> the estimate: replicas moved toward measurement
     obs = out.per_model["busy"].observed
+    # n arrivals span n-1 gaps (ISSUE 4 bugfix): the measured rate must be
+    # interval-based, not the n/window overestimate
+    assert obs["rate_rps"] == pytest.approx(
+        (obs["n"] - 1) / obs["window_s"])
     assert by_model["busy"].replicas == replicas_needed(
         ModelDemand("busy", obs["rate_rps"], obs["service_time_s"]))
     assert by_model["busy"].replicas > 1
