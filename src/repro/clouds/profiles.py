@@ -55,6 +55,14 @@ class CloudProfile:
     # dollar figure derived from this field is a simulation output
     # (DESIGN.md §1), never a measurement.
     cost_per_s: float = 1.0 / 3600.0
+    # cross-cloud artifact movement (pipeline orchestrator,
+    # repro/pipelines/artifacts.py): $ per GB leaving this cloud and the
+    # sustained cross-cloud pipe one transfer sees.  SIMULATED like the
+    # price sheet above -- egress ratios mirror the public-cloud pattern
+    # (managed clouds bill egress, a bare host does not), the pipe is a
+    # deliberately-WAN ~10 Gb/s, far below the intra-pod DCN.
+    egress_per_gb: float = 0.08
+    interconnect_bw: float = 1.25e9      # B/s
 
 
 PROFILES = {
@@ -62,23 +70,27 @@ PROFILES = {
     "gcp": CloudProfile("gcp", TPU_V5E, (16, 16),
                         network_rtt_s=0.0025, lb_overhead_s=0.0004,
                         model_load_s=0.20, startup_s=3.0,
-                        cost_per_s=1.0 / 3600.0),
+                        cost_per_s=1.0 / 3600.0,
+                        egress_per_gb=0.08, interconnect_bw=1.25e9),
     # Kubeflow-on-IBM analog: same chips, same-VPC network (lower RTT), but
     # slower control plane (paper: setup friction, slower pipeline stages)
     # and a ~1.4x replica price (the premium the lower RTT costs).
     "ibm": CloudProfile("ibm", TPU_V5E, (16, 16),
                         network_rtt_s=0.0010, lb_overhead_s=0.0004,
                         model_load_s=0.20, startup_s=5.0,
-                        cost_per_s=1.4 / 3600.0),
+                        cost_per_s=1.4 / 3600.0,
+                        egress_per_gb=0.09, interconnect_bw=1.25e9),
     # non-Kubeflow baselines (serving strategies; see serving/kserve.py)
     "baremetal": CloudProfile("baremetal", TPU_V5E, (1, 1),
                               network_rtt_s=0.0030, lb_overhead_s=0.0,
                               model_load_s=0.25, startup_s=0.0,
-                              cost_per_s=0.9 / 3600.0),
+                              cost_per_s=0.9 / 3600.0,
+                              egress_per_gb=0.0, interconnect_bw=0.625e9),
     "k8s": CloudProfile("k8s", TPU_V5E, (1, 1),
                         network_rtt_s=0.0030, lb_overhead_s=0.0006,
                         model_load_s=0.20, startup_s=1.0,
-                        cost_per_s=1.1 / 3600.0),
+                        cost_per_s=1.1 / 3600.0,
+                        egress_per_gb=0.08, interconnect_bw=0.625e9),
 }
 
 

@@ -16,9 +16,20 @@ framework contributes orchestration: dependency resolution, caching (re-use
 of components, a headline Kubeflow feature), artifact lineage, stage timing
 (Tables 4/5), and a serialized pipeline spec -- the analog of the paper's
 `minikf_generated_gcp.yaml`.
+
+This module is the AUTHORING front-end.  ``Pipeline.run()`` is the serial
+in-process executor (every step on the calling thread, wall-clock timing);
+``Pipeline.compile()`` lowers the same DAG into a ``PipelineSpec`` that the
+multi-cloud orchestrator (repro.pipelines.scheduler.Orchestrator) schedules
+onto simulated per-cloud clusters -- parallel branches, retries, artifact
+transfer accounting, and a terminal ``kind="deploy"`` step that hands the
+trained model to the serving gateway.  Both executors share the
+content-hash cache keys (``step_cache_key``), so a step cached by one is a
+cache hit for the other.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import inspect
@@ -40,12 +51,18 @@ class StepRef:
 
 class Step:
     def __init__(self, name: str, fn: Callable, args: tuple, kwargs: dict,
-                 cache: bool = True):
+                 cache: bool = True, kind: str = "compute",
+                 payload: Any = None, sim_s: Optional[float] = None,
+                 pin: Optional[str] = None):
         self.name = name
         self.fn = fn
         self.args = args
         self.kwargs = kwargs
         self.cache = cache
+        self.kind = kind                 # "compute" | "deploy"
+        self.payload = payload           # kind-specific config (DeploySpec)
+        self.sim_s = sim_s               # analytic simulated compute seconds
+        self.pin = pin                   # force this cloud (orchestrator)
         self.output: Any = None
         self.cached = False
         self.duration_s: float = 0.0
@@ -58,13 +75,138 @@ class Step:
         return out
 
 
-def _value_hash(v: Any) -> str:
+def value_hash(v: Any) -> str:
     try:
         if hasattr(v, "dtype") or isinstance(v, (dict, list, tuple)):
             return tree_hash(v)
         return hashlib.sha256(repr(v).encode()).hexdigest()[:16]
     except Exception:
         return "unhashable"
+
+
+_value_hash = value_hash                 # backward-compatible alias
+
+
+def step_cache_key(pipeline: str, step_name: str, fn: Callable,
+                   args, kwargs) -> str:
+    """Content-hash cache key over (pipeline, step, fn source, resolved
+    inputs).  Shared by the serial executor and the orchestrator
+    (repro.pipelines), so the two reuse each other's cached artifacts."""
+    h = hashlib.sha256()
+    h.update(pipeline.encode())
+    h.update(step_name.encode())
+    try:
+        h.update(inspect.getsource(fn).encode())
+    except (OSError, TypeError):
+        # source unavailable (REPL/lambda): fall back to a stable name,
+        # never repr() (contains memory addresses -> cache always misses)
+        h.update(f"{getattr(fn, '__module__', '')}."
+                 f"{getattr(fn, '__qualname__', str(fn))}".encode())
+    for a in list(args) + sorted(kwargs.items(), key=str):
+        h.update(value_hash(a).encode())
+    return "cache_" + h.hexdigest()[:16]
+
+
+def value_cacheable(v: Any) -> bool:
+    """Whether a step output can be persisted in the JSON store record.
+    The ONE predicate shared by the serial executor and the orchestrator's
+    ArtifactCache -- a drift here would silently desynchronize their
+    shared cache."""
+    return isinstance(v, (str, int, float, list, dict, type(None)))
+
+
+def cache_record(value: Any, step_name: str, clouds=(), nbytes=None) -> dict:
+    """The ONE on-disk cache record shape (ArtifactStore JSON), shared by
+    Pipeline.run and ArtifactCache.put/commit_transfer.  ``clouds`` is the
+    simulated residency ([] for the serial executor, which runs on no
+    simulated cloud: the orchestrator then has no honest source to bill a
+    transfer against and moves the artifact for free); ``nbytes`` is the
+    measured payload size when the producer knows it."""
+    cacheable = value_cacheable(value)
+    rec = {"cacheable": cacheable,
+           "value": value if cacheable else None,
+           "step": step_name,
+           "clouds": sorted(clouds)}
+    if nbytes is not None:
+        rec["nbytes"] = int(nbytes)
+    return rec
+
+
+def toposort(deps: list) -> list:
+    """Deterministic Kahn's algorithm: ``deps[i]`` lists the indices step
+    ``i`` depends on.  Ready nodes are seeded in insertion-index order and
+    popped FIFO from a deque (O(V+E); the old list.pop(0) was O(n^2)), and
+    a node's children unlock in insertion order too, so the returned order
+    is a pure function of the DAG -- orchestrator schedules built on it are
+    reproducible run to run and across processes."""
+    n = len(deps)
+    indeg = [0] * n
+    adj: list = [[] for _ in range(n)]
+    for i in range(n):
+        for d in deps[i]:
+            adj[d].append(i)
+            indeg[i] += 1
+    queue = collections.deque(i for i in range(n) if indeg[i] == 0)
+    order = []
+    while queue:
+        i = queue.popleft()
+        order.append(i)
+        for j in adj[i]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                queue.append(j)
+    if len(order) != n:
+        raise ValueError("pipeline DAG has a cycle")
+    return order
+
+
+# -- compiled form (the orchestrator's input) --------------------------------
+
+@dataclasses.dataclass
+class StepSpec:
+    """One compiled step: pure data, no execution state (the orchestrator
+    keeps its own).  ``sim_s`` replaces the measured wall duration with an
+    analytic simulated compute time (the AnalyticBackend idiom -- tests and
+    benchmark replays stay host-independent); ``pin`` forces a cloud."""
+    name: str
+    fn: Callable
+    args: tuple
+    kwargs: dict
+    index: int
+    deps: tuple
+    cache: bool = True
+    kind: str = "compute"                # "compute" | "deploy"
+    payload: Any = None                  # kind-specific (pipelines.DeploySpec)
+    sim_s: Optional[float] = None
+    pin: Optional[str] = None
+
+
+def _step_rows(steps: list) -> list:
+    """The ONE serializer for step rows (StepSpec list -> dict rows),
+    shared by Pipeline.spec() and PipelineSpec.to_dict() so the two
+    exported artifacts can never drift."""
+    return [{"name": s.name,
+             "component": getattr(s.fn, "__name__", str(s.fn)),
+             "dependencies": [steps[d].name for d in s.deps],
+             "cache": s.cache,
+             **({"kind": s.kind} if s.kind != "compute" else {}),
+             **({"pin": s.pin} if s.pin else {})}
+            for s in steps]
+
+
+@dataclasses.dataclass
+class PipelineSpec:
+    """A compiled pipeline DAG, ready for Orchestrator.execute()."""
+    name: str
+    steps: list
+
+    def to_dict(self) -> dict:
+        return {
+            "apiVersion": "repro/v1",
+            "kind": "PipelineSpec",
+            "metadata": {"name": self.name},
+            "spec": {"steps": _step_rows(self.steps)},
+        }
 
 
 class Pipeline:
@@ -80,11 +222,27 @@ class Pipeline:
 
     # -- authoring ----------------------------------------------------------
     def step(self, fn: Callable, *args, name: Optional[str] = None,
-             cache: bool = True, **kwargs) -> StepRef:
+             cache: bool = True, kind: str = "compute", payload: Any = None,
+             sim_s: Optional[float] = None, pin: Optional[str] = None,
+             **kwargs) -> StepRef:
+        """Add a step.  Steps sharing a function (or an explicit name) are
+        deduplicated ``train``, ``train_2``, ``train_3`` ... -- the suffix
+        is re-checked against every existing name, so a generated name can
+        never silently collide with an explicit one (two steps sharing a
+        name made ``run()``'s {name: output} dict drop the earlier output
+        and let cache keys alias)."""
+        if kind not in ("compute", "deploy"):
+            raise ValueError(f"unknown step kind {kind!r}")
         sname = name or fn.__name__
-        if any(s.name == sname for s in self.steps):
-            sname = f"{sname}_{len(self.steps)}"
-        self.steps.append(Step(sname, fn, args, kwargs, cache))
+        taken = {s.name for s in self.steps}
+        if sname in taken:
+            k = 2
+            while f"{sname}_{k}" in taken:
+                k += 1
+            sname = f"{sname}_{k}"
+        self.steps.append(Step(sname, fn, args, kwargs, cache,
+                               kind=kind, payload=payload, sim_s=sim_s,
+                               pin=pin))
         return StepRef(sname, len(self.steps) - 1)
 
     # -- spec export (minikf_generated_gcp.yaml analog) ---------------------
@@ -93,13 +251,7 @@ class Pipeline:
             "apiVersion": "repro/v1",
             "kind": "Pipeline",
             "metadata": {"name": self.name},
-            "spec": {"steps": [
-                {"name": s.name,
-                 "component": getattr(s.fn, "__name__", str(s.fn)),
-                 "dependencies": [self.steps[d].name for d in s.deps()],
-                 "cache": s.cache}
-                for s in self.steps
-            ]},
+            "spec": {"steps": _step_rows(self.compile().steps)},
         }
 
     def export_yaml(self, path: Optional[str] = None) -> str:
@@ -109,6 +261,20 @@ class Pipeline:
                 f.write(text)
         return text
 
+    def compile(self) -> PipelineSpec:
+        """Lower the authored DAG into the orchestrator's PipelineSpec.
+        Deploy steps are never cached (the gateway handoff is a side
+        effect); the serial run() treats them as plain steps (the fn runs,
+        no gateway handoff -- orchestrator-only semantics)."""
+        return PipelineSpec(self.name, [
+            StepSpec(name=s.name, fn=s.fn, args=tuple(s.args),
+                     kwargs=dict(s.kwargs), index=i,
+                     deps=tuple(dict.fromkeys(s.deps())),
+                     cache=s.cache and s.kind != "deploy",
+                     kind=s.kind, payload=s.payload, sim_s=s.sim_s,
+                     pin=s.pin)
+            for i, s in enumerate(self.steps)])
+
     # -- execution ----------------------------------------------------------
     def _resolve(self, v: Any):
         if isinstance(v, StepRef):
@@ -116,20 +282,7 @@ class Pipeline:
         return v
 
     def _cache_key(self, step: Step, args, kwargs) -> str:
-        h = hashlib.sha256()
-        h.update(self.name.encode())
-        h.update(step.name.encode())
-        try:
-            h.update(inspect.getsource(step.fn).encode())
-        except (OSError, TypeError):
-            # source unavailable (REPL/lambda): fall back to a stable name,
-            # never repr() (contains memory addresses -> cache always misses)
-            fn = step.fn
-            h.update(f"{getattr(fn, '__module__', '')}."
-                     f"{getattr(fn, '__qualname__', str(fn))}".encode())
-        for a in list(args) + sorted(kwargs.items(), key=str):
-            h.update(_value_hash(a).encode())
-        return "cache_" + h.hexdigest()[:16]
+        return step_cache_key(self.name, step.name, step.fn, args, kwargs)
 
     def run(self, verbose: bool = False) -> dict:
         """Execute all steps; returns {step_name: output}."""
@@ -158,35 +311,13 @@ class Pipeline:
             if verbose:
                 print(f"[{self.name}] {step.name}: {step.duration_s:.3f}s")
             if key is not None:
-                cacheable = isinstance(step.output, (str, int, float, list, dict,
-                                                     type(None)))
-                self.store.save_json(key, {"cacheable": cacheable,
-                                           "value": step.output if cacheable else None,
-                                           "step": step.name})
+                self.store.save_json(key, cache_record(step.output, step.name))
         total = time.perf_counter() - t_start
         self.log.record(f"pipeline:{self.name}", total)
         return {s.name: s.output for s in self.steps}
 
     def _toposort(self) -> list:
-        n = len(self.steps)
-        indeg = [0] * n
-        adj: list[list[int]] = [[] for _ in range(n)]
-        for i, s in enumerate(self.steps):
-            for d in s.deps():
-                adj[d].append(i)
-                indeg[i] += 1
-        queue = [i for i in range(n) if indeg[i] == 0]
-        order = []
-        while queue:
-            i = queue.pop(0)
-            order.append(i)
-            for j in adj[i]:
-                indeg[j] -= 1
-                if indeg[j] == 0:
-                    queue.append(j)
-        if len(order) != n:
-            raise ValueError("pipeline DAG has a cycle")
-        return order
+        return toposort([s.deps() for s in self.steps])
 
 
 def component(fn: Callable) -> Callable:

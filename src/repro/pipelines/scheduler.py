@@ -1,0 +1,593 @@
+"""Discrete-event pipeline orchestrator: the Kubeflow-Pipelines / Argo
+control-plane analog, scheduling a compiled step DAG onto simulated
+per-cloud clusters instead of executing it serially in-process.
+
+The simulation contract is the repo-wide hardware gate (DESIGN.md §1):
+each step's COMPUTE time is measured on this host (the fn runs for real,
+exactly once, wall-clocked -- or takes an analytic ``sim_s``), while the
+control-plane and network terms are CloudProfile constants: every attempt
+charges ``startup_s`` (cluster/pod spin-up, the paper's per-stage
+control-plane delta) + ``network_rtt_s`` (the control-plane hop) + any
+cross-cloud artifact transfers (artifacts.py) + compute, and bills
+``duration x cost_per_s`` worker-seconds against the price sheet.
+
+Scheduling (the ``placement.plan_placement`` analog, per step): a ready
+step takes a free worker on an eligible cloud -- not down, pin honored --
+ranked by ``policy``: "makespan" minimizes the estimated completion
+(startup + rtt + transfer estimate + known duration), "cost" takes the
+cheapest cloud first.  Independent DAG branches therefore run in PARALLEL
+across the ``{cloud: workers}`` slots; the greedy scheduler never idles a
+worker while a step is ready, so with no failures the simulated makespan
+never exceeds the serial sum of step durations (work conservation -- the
+invariant suite asserts it).
+
+Failures: ``FailureSpec``-style outage windows (duck-typed: cloud / at_s /
+duration_s, same shape the gateway injects) kill every attempt running on
+that cloud at the window start; the step retries with exponential backoff
+(``RetryPolicy``), usually landing on a surviving cloud, until it
+permanently fails and its descendants are skipped.  Completion is exactly
+once: the fn's real execution happens once per run regardless of simulated
+attempts, and a step ends in exactly one of done / failed / skipped.
+
+A terminal ``kind="deploy"`` step closes the paper's train->serve loop:
+its fn builds a serving backend from the trained artifact, the orchestrator
+sizes a placement (``plan_placement``) from the backend's MEASURED service
+time and hands it to ``Gateway.deploy`` -- one run goes pipeline ->
+placement -> live gateway.
+
+Event vocabulary (telemetry/events.py): pipeline:run / schedule / step /
+cache_hit / transfer / retry / fail / skip / deploy / recurring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Any, Optional
+
+from ..clouds.profiles import PROFILES, CloudProfile, get_profile
+from ..core.pipeline import PipelineSpec, StepRef, step_cache_key, toposort
+from ..telemetry.events import EventLog
+from .artifacts import ArtifactCache, best_transfer, payload_bytes
+from .runs import RetryPolicy, RunRecord, StepRecord
+
+
+@dataclasses.dataclass
+class DeploySpec:
+    """Config for a terminal ``kind="deploy"`` step (the train->serve
+    handoff).  The step's fn is the BACKEND FACTORY: it receives the
+    upstream artifacts (e.g. trained params) and returns a gateway backend
+    (``.name`` + ``.service_time(b)``).  The orchestrator then builds a
+    ``ModelDemand`` from the backend's measured service time -- either a
+    fixed ``rate`` (req/s) or a host-independent ``load_erlangs`` (offered
+    load; rate = load / service_time) -- plans a placement over ``clouds``
+    (placement.CloudCapacity list) and deploys the model active-active
+    through ``Gateway.deploy`` with the plan's weights and queue hints."""
+    model: str
+    clouds: list
+    rate: Optional[float] = None
+    load_erlangs: Optional[float] = None
+    objective: str = "cost"
+    split: bool = True
+    autoscaler: Any = None               # gateway Autoscaler(Config) or None
+    max_batch: int = 32
+
+    def __post_init__(self):
+        if (self.rate is None) == (self.load_erlangs is None):
+            raise ValueError("set exactly one of rate / load_erlangs")
+        if self.objective not in ("cost", "p99"):
+            raise ValueError(f"unknown objective {self.objective!r}")
+
+
+class _WorkerPool:
+    def __init__(self, profile: CloudProfile, workers: int):
+        self.profile = profile
+        self.workers = workers
+        self.busy = 0
+
+    def free(self) -> int:
+        return self.workers - self.busy
+
+
+class _StepState:
+    def __init__(self, record: StepRecord):
+        self.record = record
+        self.status = "pending"          # ready|running|done|failed|skipped
+        self.executed = False            # the real fn ran (exactly once)
+        self.output: Any = None
+        self.compute_s = 0.0
+        self.extra_s = 0.0               # deploy model loads
+        self.out_clouds: Optional[set] = None
+        self.nbytes = 0
+        self.entry = None                # ArtifactCache entry, if cached
+        self.cache_key: Optional[str] = None
+        self.key_done = False            # inputs are fixed once deps are
+        # done, so the content hash is computed once, not per ready pass
+        self.deploy_info: Optional[dict] = None
+        self.deploy_apply: Optional[dict] = None  # Gateway.deploy kwargs,
+        # applied on successful COMPLETION only: a permanently failed
+        # deploy step must not leave a live deployment behind
+        self.pending: Optional[dict] = None   # in-flight attempt bookkeeping
+
+
+class Orchestrator:
+    """Event-driven executor over ``{cloud: worker pool}`` slots.
+
+    clusters: {CloudProfile | name: n_workers} -- the simulated per-cloud
+    clusters steps schedule onto.  policy: "makespan" | "cost" (see module
+    docstring).  The ArtifactCache and EventLog persist across execute()
+    calls, which is what makes recurring runs cache-hit (runs.py).
+    """
+
+    def __init__(self, clusters: dict, *, policy: str = "makespan",
+                 retry: Optional[RetryPolicy] = None,
+                 cache: Optional[ArtifactCache] = None,
+                 log: Optional[EventLog] = None):
+        if policy not in ("cost", "makespan"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.pools: dict[str, _WorkerPool] = {}
+        for key, n in clusters.items():
+            prof = key if isinstance(key, CloudProfile) else get_profile(key)
+            if int(n) < 1:
+                raise ValueError(f"{prof.name}: needs >= 1 worker")
+            if prof.name in self.pools:
+                raise ValueError(f"duplicate cluster {prof.name!r}")
+            self.pools[prof.name] = _WorkerPool(prof, int(n))
+        if not self.pools:
+            raise ValueError("orchestrator needs at least one cluster")
+        self.policy = policy
+        self.retry = retry or RetryPolicy()
+        self.cache = cache if cache is not None else ArtifactCache()
+        self.log = log or EventLog()
+
+    # -- outage windows ------------------------------------------------------
+    @staticmethod
+    def _windows(failures) -> dict:
+        out: dict = {}
+        for f in failures or []:
+            if f.at_s < 0 or f.duration_s <= 0:
+                raise ValueError("failure windows need at_s >= 0 and "
+                                 "duration_s > 0")
+            out.setdefault(f.cloud, []).append(
+                (float(f.at_s), float(f.at_s + f.duration_s)))
+        for w in out.values():
+            w.sort()
+        return out
+
+    @staticmethod
+    def _down_at(windows: dict, cloud: str, t: float) -> bool:
+        return any(a <= t < e for a, e in windows.get(cloud, ()))
+
+    @staticmethod
+    def _fails_at(windows: dict, cloud: str, t: float,
+                  t_end: float) -> Optional[float]:
+        """First outage start strictly inside (t, t_end), else None."""
+        for a, _ in windows.get(cloud, ()):
+            if t < a < t_end:
+                return a
+        return None
+
+    # -- input artifacts -----------------------------------------------------
+    @staticmethod
+    def _dep_indices(step) -> list:
+        return list(step.deps)
+
+    def _inputs_blocked(self, st: list, step, windows: dict,
+                        t: float) -> bool:
+        """True when some input artifact has residency but every resident
+        cloud is mid-outage: the control plane cannot fetch it from
+        anywhere, so the step must wait for a recovery edge -- the same
+        rule the cache-hit path applies.  (Destination-independent.)"""
+        for d in self._dep_indices(step):
+            clouds = st[d].out_clouds
+            if clouds and all(self._down_at(windows, c, t) for c in clouds):
+                return True
+        return False
+
+    def _plan_inputs(self, st: list, step, cloud: str, windows: dict,
+                     t: float) -> list:
+        """Transfers needed to make every input local on ``cloud``:
+        [(dep_idx, src_cloud, seconds, usd, nbytes)] -- priced by the one
+        shared rule (artifacts.best_transfer), sourcing only from clouds
+        that are LIVE at ``t`` (a dead cloud cannot serve bytes; callers
+        gate on _inputs_blocked first, so a live source exists whenever
+        residency is known)."""
+        out = []
+        dst = self.pools[cloud].profile
+        profiles = {c: p.profile for c, p in self.pools.items()}
+        for d in self._dep_indices(step):
+            s = st[d]
+            live = {c for c in (s.out_clouds or ())
+                    if not self._down_at(windows, c, t)}
+            move = best_transfer(live, s.nbytes, dst, profiles)
+            if move is not None:
+                src_c, t_s, usd = move
+                out.append((d, src_c, t_s, usd, s.nbytes))
+        return out
+
+    # -- the run -------------------------------------------------------------
+    def execute(self, spec: PipelineSpec, *, t0: float = 0.0,
+                failures: Optional[list] = None, gateway=None,
+                run_id: Optional[str] = None) -> RunRecord:
+        names = [s.name for s in spec.steps]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate step names in {spec.name!r}")
+        for s in spec.steps:
+            if s.pin is not None and s.pin not in self.pools:
+                raise ValueError(f"step {s.name!r} pinned to unknown cloud "
+                                 f"{s.pin!r}")
+            if s.kind == "deploy":
+                if s.payload is None:
+                    raise ValueError(f"deploy step {s.name!r} needs a "
+                                     "DeploySpec payload")
+                if gateway is None:
+                    raise ValueError(f"deploy step {s.name!r} needs "
+                                     "execute(gateway=...)")
+        toposort([list(s.deps) for s in spec.steps])   # cycle check
+        run_id = run_id or spec.name
+        windows = self._windows(failures)
+        for pool in self.pools.values():
+            pool.busy = 0
+
+        st = [_StepState(StepRecord(s.name)) for s in spec.steps]
+        children: list = [[] for _ in spec.steps]
+        for s in spec.steps:
+            for d in s.deps:
+                children[d].append(s.index)
+        indeg = [len(s.deps) for s in spec.steps]
+
+        events: list = []
+        seq = itertools.count()
+        ready: set = set()
+        for s in spec.steps:
+            if indeg[s.index] == 0:
+                heapq.heappush(events, (float(t0), next(seq), "ready",
+                                        s.index))
+        for cloud, ws in windows.items():
+            for _, end in ws:            # recovery edges re-arm scheduling
+                heapq.heappush(events, (end, next(seq), "recover", cloud))
+
+        t_last = float(t0)
+        wall0 = time.perf_counter()
+
+        def cascade_skip(i: int, t: float) -> None:
+            stack = list(children[i])
+            while stack:
+                j = stack.pop()
+                if st[j].status in ("pending", "ready"):
+                    st[j].status = "skipped"
+                    st[j].record.status = "skipped"
+                    ready.discard(j)
+                    self.log.record("pipeline:skip", 0.0, step=names[j],
+                                    reason="upstream", t_sim=round(t, 6))
+                    stack.extend(children[j])
+
+        def finish(i: int, t: float, pend: dict) -> None:
+            nonlocal t_last
+            s = st[i]
+            rec = s.record
+            s.status = "done"
+            rec.status = "done"
+            rec.cloud = pend["cloud"]
+            rec.cached = pend["cached"]
+            rec.end_s = t
+            t_last = max(t_last, t)
+            if pend["cached"]:
+                s.output = pend["value"]
+                s.entry = pend["entry"]
+                s.out_clouds = pend["entry"].clouds
+                s.nbytes = pend["entry"].nbytes
+                pend["entry"].hits += 1
+            else:
+                self.pools[pend["cloud"]].busy -= 1
+                rec.attempts[-1]["end_s"] = t
+                rec.attempts[-1]["status"] = "ok"
+                rec.attempts[-1]["cost_usd"] = pend["cost"]
+                rec.cost_usd += pend["cost"]
+                if pend["key"] is not None:
+                    s.entry = self.cache.put(pend["key"], s.output,
+                                             names[i], pend["cloud"])
+                    s.out_clouds = s.entry.clouds
+                    s.nbytes = s.entry.nbytes
+                else:
+                    s.out_clouds = {pend["cloud"]}
+                    s.nbytes = payload_bytes(s.output)
+                for d, _src, _ts, _usd, _nb in pend["transfers"]:
+                    if st[d].entry is not None:
+                        self.cache.commit_transfer(st[d].entry, pend["cloud"])
+                    else:
+                        st[d].out_clouds.add(pend["cloud"])
+            if s.deploy_apply is not None:
+                # the handoff side effect happens exactly once, HERE: a
+                # deploy step that never completes never touches the fleet
+                gateway.deploy(**s.deploy_apply)
+                s.deploy_apply = None
+            if s.deploy_info is not None:
+                self.log.record("pipeline:deploy", 0.0, step=names[i],
+                                t_sim=round(t, 6), **s.deploy_info)
+            self.log.record("pipeline:step", pend["dur"], step=names[i],
+                            cloud=pend["cloud"], cached=pend["cached"],
+                            attempts=len(rec.attempts),
+                            cost=round(rec.cost_usd, 10), t_sim=round(t, 6))
+            for j in children[i]:
+                indeg[j] -= 1
+                if indeg[j] == 0 and st[j].status == "pending":
+                    st[j].status = "ready"
+                    ready.add(j)
+
+        def perm_fail(i: int, t: float, reason: str) -> None:
+            nonlocal t_last
+            st[i].status = "failed"
+            st[i].record.status = "failed"
+            st[i].record.end_s = t
+            t_last = max(t_last, t)
+            self.log.record("pipeline:fail", 0.0, step=names[i],
+                            attempts=len(st[i].record.attempts),
+                            reason=reason, t_sim=round(t, 6))
+            cascade_skip(i, t)
+
+        def schedule(t: float) -> None:
+            for i in sorted(ready):
+                step = spec.steps[i]
+                s = st[i]
+                # cache hit: the control plane reuses the artifact without
+                # starting a pod -- no worker, no startup, one rtt to the
+                # resident cloud (Kubeflow step caching)
+                key = None
+                if step.cache:
+                    if not s.key_done:
+                        args = tuple(self._resolve(st, a) for a in step.args)
+                        kwargs = {k: self._resolve(st, v)
+                                  for k, v in step.kwargs.items()}
+                        s.cache_key = step_cache_key(
+                            spec.name, step.name, step.fn, args, kwargs)
+                        s.key_done = True
+                    key = s.cache_key
+                    entry = self.cache.get(key)
+                    if entry is not None:
+                        # serve the hit from a LIVE resident cloud; if the
+                        # artifact lives only on dead clouds the control
+                        # plane cannot fetch it -- wait for recovery (an
+                        # outage must hit cached recurring runs too)
+                        homes = sorted(entry.clouds)
+                        live = [c for c in homes
+                                if not self._down_at(windows, c, t)]
+                        if homes and not live:
+                            continue
+
+                        def _prof(c):
+                            # a resident cloud outside this cluster map (a
+                            # retired cluster's store entry) still prices
+                            # its own control-plane RTT -- same PROFILES
+                            # fallback as best_transfer
+                            p = self.pools.get(c)
+                            return p.profile if p else PROFILES.get(c)
+
+                        # fastest live resident cloud serves the hit, the
+                        # same fastest-then-name rule best_transfer uses
+                        home = min(
+                            live,
+                            key=lambda c: ((_prof(c).network_rtt_s
+                                            if _prof(c) else 0.0), c)) \
+                            if live else None
+                        hp = _prof(home) if home else None
+                        rtt = hp.network_rtt_s if hp else 0.0
+                        s.status = "running"
+                        ready.discard(i)
+                        s.record.start_s = t
+                        self.log.record("pipeline:cache_hit", 0.0,
+                                        step=names[i], key=key,
+                                        cloud=home, t_sim=round(t, 6))
+                        heapq.heappush(events, (
+                            t + rtt, next(seq), "done",
+                            (i, {"cloud": home, "cached": True,
+                                 "value": entry.value, "entry": entry,
+                                 "dur": rtt, "cost": 0.0, "key": None,
+                                 "transfers": []})))
+                        continue
+                if self._inputs_blocked(st, step, windows, t):
+                    continue             # inputs live only on dead clouds:
+                cands = [p for c, p in self.pools.items()   # wait, like a
+                         if p.free() > 0                    # cache hit would
+                         and not self._down_at(windows, c, t)
+                         and (step.pin is None or step.pin == c)]
+                if not cands:
+                    continue             # stays ready; a done/abort/recover
+                ready.discard(i)         # event re-runs this pass
+                pool = min(cands, key=lambda p: self._rank(st, step, p,
+                                                           windows, t))
+                transfers = self._plan_inputs(st, step, pool.profile.name,
+                                              windows, t)
+                self._start_attempt(spec, st, i, pool, t, key, transfers,
+                                    windows, events, seq, perm_fail)
+
+        while events:
+            t = events[0][0]
+            batch = []
+            while events and events[0][0] == t:
+                batch.append(heapq.heappop(events))
+            for _, _, kind, data in batch:
+                if kind == "ready":
+                    if st[data].status == "pending":
+                        st[data].status = "ready"
+                        ready.add(data)
+                    elif st[data].status == "retry_wait":
+                        st[data].status = "ready"
+                        ready.add(data)
+                elif kind == "recover":
+                    pass                 # scheduling pass below re-checks
+                elif kind == "done":
+                    i, pend = data
+                    finish(i, t, pend)
+                else:                    # "abort": outage killed the attempt
+                    i = data
+                    s = st[i]
+                    pend = s.pending
+                    s.pending = None
+                    self.pools[pend["cloud"]].busy -= 1
+                    cost = (t - pend["start"]) \
+                        * self.pools[pend["cloud"]].profile.cost_per_s \
+                        + pend["tr_usd"]
+                    s.record.attempts[-1]["end_s"] = t
+                    s.record.attempts[-1]["status"] = "outage"
+                    s.record.attempts[-1]["cost_usd"] = cost
+                    s.record.cost_usd += cost
+                    t_last = max(t_last, t)
+                    n_att = len(s.record.attempts)
+                    if n_att > self.retry.max_retries:
+                        perm_fail(i, t, "outage")
+                    else:
+                        nxt = t + self.retry.delay_s(n_att - 1)
+                        s.status = "retry_wait"
+                        self.log.record("pipeline:retry", 0.0, step=names[i],
+                                        cloud=pend["cloud"], attempt=n_att,
+                                        t_sim=round(t, 6),
+                                        next_s=round(nxt, 6),
+                                        reason="outage")
+                        heapq.heappush(events, (nxt, next(seq), "ready", i))
+            schedule(t)
+
+        bad = [names[i] for i, s in enumerate(st)
+               if s.status not in ("done", "failed", "skipped")]
+        if bad:
+            raise RuntimeError(f"orchestrator stalled on {bad}")
+
+        steps = {names[i]: s.record for i, s in enumerate(st)}
+        status = ("succeeded" if all(s.status == "done" for s in st)
+                  else "failed")
+        rec = RunRecord(
+            run_id, spec.name, status, float(t0), t_last, steps,
+            {names[i]: s.output for i, s in enumerate(st)
+             if s.status == "done"},
+            cost_usd=sum(r.cost_usd for r in steps.values()),
+            cache_hits=sum(1 for r in steps.values() if r.cached))
+        self.log.record("pipeline:run", rec.makespan_s, run_id=run_id,
+                        pipeline=spec.name, status=status,
+                        cost=round(rec.cost_usd, 10),
+                        wall_s=round(time.perf_counter() - wall0, 4))
+        return rec
+
+    # -- attempt machinery ---------------------------------------------------
+    @staticmethod
+    def _resolve(st: list, v: Any):
+        if isinstance(v, StepRef):
+            return st[v.index].output
+        return v
+
+    def _rank(self, st: list, step, pool: _WorkerPool, windows: dict,
+              t: float) -> tuple:
+        """Policy key for one eligible pool (lower is better).  The
+        completion estimate only counts KNOWN terms: control-plane
+        constants, the transfer plan, and the compute duration when it is
+        analytic (sim_s) or already measured by an earlier attempt."""
+        prof = pool.profile
+        tr = sum(x[2] for x in self._plan_inputs(st, step, prof.name,
+                                                 windows, t))
+        known = step.sim_s if step.sim_s is not None else (
+            st[step.index].compute_s if st[step.index].executed else 0.0)
+        est = prof.startup_s + prof.network_rtt_s + tr + known
+        if self.policy == "cost":
+            return (prof.cost_per_s, est, prof.name)
+        return (est, prof.cost_per_s, prof.name)
+
+    def _start_attempt(self, spec, st, i: int, pool: _WorkerPool, t: float,
+                       key, transfers, windows, events, seq,
+                       perm_fail) -> None:
+        step = spec.steps[i]
+        s = st[i]
+        names = step.name
+        cloud = pool.profile.name
+        tr_s = sum(x[2] for x in transfers)
+        tr_usd = sum(x[3] for x in transfers)
+        if not s.executed:
+            args = tuple(self._resolve(st, a) for a in step.args)
+            kwargs = {k: self._resolve(st, v)
+                      for k, v in step.kwargs.items()}
+            w0 = time.perf_counter()
+            try:
+                s.output = step.fn(*args, **kwargs)
+            except Exception as e:       # authoring bug, not an outage:
+                s.executed = True        # fail fast, no retries
+                s.record.start_s = t
+                s.record.attempts.append(
+                    {"cloud": cloud, "start_s": t, "end_s": t,
+                     "status": "exception", "cost_usd": 0.0})
+                perm_fail(i, t, f"exception:{type(e).__name__}")
+                return
+            wall = time.perf_counter() - w0
+            s.executed = True
+            s.compute_s = step.sim_s if step.sim_s is not None else wall
+            if step.kind == "deploy":
+                ok = self._plan_handoff(step, s)
+                if not ok:
+                    s.record.start_s = t
+                    s.record.attempts.append(
+                        {"cloud": cloud, "start_s": t, "end_s": t,
+                         "status": "infeasible", "cost_usd": 0.0})
+                    perm_fail(i, t, "deploy_infeasible")
+                    return
+        dur = (pool.profile.startup_s + pool.profile.network_rtt_s
+               + tr_s + s.compute_s + s.extra_s)
+        t_end = t + dur
+        s.status = "running"
+        if not s.record.attempts:
+            s.record.start_s = t
+        s.record.compute_s = s.compute_s
+        s.record.transfer_s += tr_s
+        s.record.transfer_cost_usd += tr_usd
+        s.record.attempts.append({"cloud": cloud, "start_s": t,
+                                  "end_s": t_end, "status": "ok",
+                                  "cost_usd": 0.0})
+        pool.busy += 1
+        self.log.record("pipeline:schedule", 0.0, step=names, cloud=cloud,
+                        attempt=len(s.record.attempts), t_sim=round(t, 6))
+        for d, src, t_tr, usd, nb in transfers:
+            self.log.record("pipeline:transfer", t_tr, step=names,
+                            src=src, dst=cloud, bytes=int(nb),
+                            cost=round(usd, 10), t_sim=round(t, 6))
+        t_f = self._fails_at(windows, cloud, t, t_end)
+        if t_f is not None:
+            s.pending = {"cloud": cloud, "start": t, "tr_usd": tr_usd}
+            heapq.heappush(events, (t_f, next(seq), "abort", i))
+            return
+        cost = dur * pool.profile.cost_per_s + tr_usd
+        heapq.heappush(events, (t_end, next(seq), "done",
+                                (i, {"cloud": cloud, "cached": False,
+                                     "dur": dur, "cost": cost, "key": key,
+                                     "transfers": transfers})))
+
+    def _plan_handoff(self, step, s: _StepState) -> bool:
+        """Deploy planning: size a placement from the backend's measured
+        service time.  The Gateway.deploy call itself is DEFERRED to the
+        step's successful completion (finish) so a deploy step that
+        permanently fails leaves no live deployment behind.  The fn's
+        output (the backend) is replaced by a JSON-able summary; the
+        backend itself lives on inside the prepared deploy kwargs."""
+        from ..serving.gateway.placement import ModelDemand, plan_placement
+        ds: DeploySpec = step.payload
+        backend = s.output
+        svc = backend.service_time(ds.max_batch) / ds.max_batch
+        rate = ds.rate if ds.rate is not None else ds.load_erlangs / svc
+        plan = plan_placement([ModelDemand(ds.model, rate, svc)], ds.clouds,
+                              objective=ds.objective, split=ds.split)
+        a = plan.assignments[0]
+        if not plan.feasible or not a.shares:
+            return False
+        profiles = {c.profile.name: c.profile for c in ds.clouds}
+        s.deploy_apply = dict(
+            name=ds.model, backend=backend,
+            split={profiles[c]: w for c, w in a.weights.items()},
+            autoscaler=ds.autoscaler, max_batch=ds.max_batch,
+            queue_hint=dict(a.est_wait_s))
+        # weights loaded onto every serving cloud: one model_load_s each
+        s.extra_s = sum(profiles[c].model_load_s for c in a.shares)
+        s.deploy_info = {"model": ds.model,
+                         "weights": {c: round(w, 6)
+                                     for c, w in a.weights.items()},
+                         "replicas": dict(a.shares),
+                         "cost_hr": round(a.cost_hr, 6)}
+        s.output = {"model": ds.model, "weights": dict(a.weights),
+                    "replicas": dict(a.shares), "cost_hr": a.cost_hr,
+                    "est_p99_s": a.est_p99_s}
+        return True

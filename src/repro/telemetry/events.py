@@ -34,6 +34,33 @@ Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
                              restored on recovery)
   gateway:observed           measured arrival rate + realized service time
                              per model (placement.replan input)
+
+Pipeline-orchestrator vocabulary (pipelines/scheduler.py + runs.py,
+DESIGN.md S4; t_sim stamps are simulated seconds):
+  pipeline:run               one orchestrated run (duration = simulated
+                             makespan; carries run_id / status / cost and
+                             the real wall_s the step fns took)
+  pipeline:schedule          a step attempt took a worker on a cloud
+                             (step / cloud / attempt number)
+  pipeline:step              a step completed exactly once (simulated
+                             duration, cloud, cached flag, attempt count,
+                             accumulated cost)
+  pipeline:cache_hit         the control plane reused a content-hash
+                             artifact without starting a pod (step / key /
+                             resident cloud)
+  pipeline:transfer          an input artifact moved cross-cloud
+                             (src / dst / bytes; duration = simulated
+                             transfer seconds, cost = simulated egress $)
+  pipeline:retry             an outage killed an attempt and the step
+                             backed off (attempt number, next_s)
+  pipeline:fail              a step permanently failed (retries exhausted,
+                             an exception, or an infeasible deploy plan)
+  pipeline:skip              a step never ran because an ancestor failed
+  pipeline:deploy            the terminal deploy step handed a model to
+                             the serving gateway (model / weights /
+                             replicas / cost_hr)
+  pipeline:recurring         a recurring-run trigger fired (pipeline,
+                             index, t_sim)
 """
 from __future__ import annotations
 

@@ -1,0 +1,399 @@
+"""Unit tests for the multi-cloud pipeline orchestrator
+(repro/pipelines/): scheduling, placement policies, outage retries,
+exactly-once completion, artifact caching + cross-cloud transfers,
+recurring runs, and the deploy handoff into the serving gateway."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.clouds.profiles import get_profile
+from repro.core.pipeline import Pipeline
+from repro.pipelines import (ArtifactCache, DeploySpec, Orchestrator,
+                             PipelineRuns, RetryPolicy)
+from repro.serving.gateway import (AutoscalerConfig, CloudCapacity,
+                                   FailureSpec, Gateway, TrafficSpec)
+
+from conftest import AnalyticBackend
+
+GCP = get_profile("gcp")
+IBM = get_profile("ibm")
+
+
+def _counted(calls):
+    def fn(tag, *deps):
+        calls[tag] = calls.get(tag, 0) + 1
+        return [tag] + [d[0] for d in deps if isinstance(d, list)]
+    return fn
+
+
+def fanout_spec(n_branches=4, sim=1.0, cache=True, calls=None):
+    calls = calls if calls is not None else {}
+    fn = _counted(calls)
+    pipe = Pipeline("fan")
+    p = pipe.step(fn, 0, sim_s=0.2, name="prep", cache=cache)
+    bs = [pipe.step(fn, 10 + i, p, sim_s=sim, name=f"branch{i}", cache=cache)
+          for i in range(n_branches)]
+    pipe.step(fn, 99, *bs, sim_s=0.1, name="merge", cache=cache)
+    return pipe.compile(), calls
+
+
+def test_fanout_runs_branches_in_parallel():
+    spec, calls = fanout_spec()
+    orch = Orchestrator({"gcp": 2, "ibm": 2})
+    rec = orch.execute(spec)
+    assert rec.status == "succeeded"
+    assert all(r.status == "done" for r in rec.steps.values())
+    # each fn ran exactly once
+    assert all(v == 1 for v in calls.values())
+    # branches overlap in simulated time (true parallelism)
+    b = [rec.steps[f"branch{i}"] for i in range(4)]
+    assert all(x.start_s == b[0].start_s for x in b)
+    # work conservation: makespan never exceeds the serial sum
+    serial = sum(r.duration_s for r in rec.steps.values())
+    assert rec.makespan_s <= serial + 1e-9
+    # and genuinely beats it on a 4-way fan-out over 4 workers
+    assert serial / rec.makespan_s > 1.5
+
+
+def test_cost_policy_prefers_cheap_cloud_makespan_prefers_fast():
+    fast_dear = dataclasses.replace(GCP, cost_per_s=2.0 / 3600.0)
+    slow_cheap = dataclasses.replace(IBM, cost_per_s=1.0 / 3600.0)
+    pipe = Pipeline("one")
+    pipe.step(lambda: 1, name="s", sim_s=0.5)
+    spec = pipe.compile()
+    rec_cost = Orchestrator({fast_dear: 1, slow_cheap: 1},
+                            policy="cost").execute(spec)
+    rec_mk = Orchestrator({fast_dear: 1, slow_cheap: 1},
+                          policy="makespan").execute(spec)
+    assert rec_cost.steps["s"].cloud == "ibm"     # cheapest first
+    assert rec_mk.steps["s"].cloud == "gcp"       # startup 3s < 5s
+
+
+def test_pin_forces_cloud():
+    pipe = Pipeline("pinned")
+    pipe.step(lambda: 1, name="s", sim_s=0.1, pin="ibm")
+    rec = Orchestrator({"gcp": 1, "ibm": 1}).execute(pipe.compile())
+    assert rec.steps["s"].cloud == "ibm"
+    with pytest.raises(ValueError, match="unknown cloud"):
+        Orchestrator({"gcp": 1}).execute(pipe.compile())
+
+
+def test_outage_mid_attempt_retries_and_completes_once():
+    calls = {}
+    fn = _counted(calls)
+    pipe = Pipeline("retry")
+    pipe.step(fn, 0, sim_s=1.0, name="s")
+    spec = pipe.compile()
+    orch = Orchestrator({"gcp": 1}, retry=RetryPolicy(max_retries=2,
+                                                      backoff_s=0.25))
+    # attempt spans [0, ~4.0); the outage at 3.0 kills it
+    rec = orch.execute(spec, failures=[FailureSpec("gcp", 3.0, 0.5)])
+    r = rec.steps["s"]
+    assert rec.status == "succeeded" and r.status == "done"
+    assert calls[0] == 1                          # fn ran exactly once
+    assert len(r.attempts) == 2
+    assert r.attempts[0]["status"] == "outage"
+    assert r.attempts[0]["end_s"] == pytest.approx(3.0)
+    # retry backs off past the recovery edge, then restarts
+    assert r.attempts[1]["start_s"] >= 3.5
+    assert orch.log.count("pipeline:retry") == 1
+    assert orch.log.count("pipeline:step") == 1
+    # the failed attempt is still billed for its worker-seconds
+    assert r.cost_usd > r.attempts[1]["cost_usd"]
+
+
+def test_retries_exhausted_fails_step_and_skips_descendants():
+    pipe = Pipeline("perm")
+    a = pipe.step(lambda: 1, name="a", sim_s=1.0)
+    pipe.step(lambda x: x, a, name="b", sim_s=0.1)
+    spec = pipe.compile()
+    orch = Orchestrator({"gcp": 1}, retry=RetryPolicy(max_retries=1,
+                                                      backoff_s=0.1))
+    rec = orch.execute(spec, failures=[FailureSpec("gcp", 3.0, 0.2),
+                                       FailureSpec("gcp", 3.5, 0.2)])
+    assert rec.status == "failed"
+    assert rec.steps["a"].status == "failed"
+    assert len(rec.steps["a"].attempts) == 2
+    assert rec.steps["b"].status == "skipped"
+    assert orch.log.count("pipeline:fail") == 1
+    assert orch.log.count("pipeline:skip") == 1
+    assert "b" not in rec.outputs
+
+
+def test_exception_fails_fast_without_retries():
+    pipe = Pipeline("boom")
+    a = pipe.step(lambda: 1 / 0, name="a")
+    pipe.step(lambda x: x, a, name="b")
+    orch = Orchestrator({"gcp": 1})
+    rec = orch.execute(pipe.compile())
+    assert rec.status == "failed"
+    assert rec.steps["a"].status == "failed"
+    assert len(rec.steps["a"].attempts) == 1
+    assert rec.steps["b"].status == "skipped"
+    ev = orch.log.named("pipeline:fail")[0]
+    assert ev["reason"].startswith("exception:ZeroDivisionError")
+
+
+def test_cache_hits_never_reexecute_and_bypass_workers():
+    spec, calls = fanout_spec(cache=True)
+    orch = Orchestrator({"gcp": 2, "ibm": 2})
+    rec1 = orch.execute(spec)
+    n_after_first = dict(calls)
+    rec2 = orch.execute(spec)
+    assert calls == n_after_first                 # nothing re-ran
+    assert rec2.cache_hits == len(spec.steps)
+    assert all(r.cached and r.status == "done" for r in rec2.steps.values())
+    assert orch.log.count("pipeline:cache_hit") == len(spec.steps)
+    # a cached run is control-plane-only: no startup, tiny makespan, $0
+    assert rec2.makespan_s < 0.1 and rec2.cost_usd == 0.0
+    assert rec2.outputs == rec1.outputs
+
+
+def test_cross_cloud_transfer_charged_once_then_resident():
+    big = np.zeros(125_000_000 // 8, np.float64)   # 125 MB
+    pipe = Pipeline("xfer")
+    a = pipe.step(lambda: big, name="produce", sim_s=0.1, pin="gcp")
+    b = pipe.step(lambda x: float(x[0]), a, name="consume", sim_s=0.1,
+                  pin="ibm")
+    pipe.step(lambda x, y: y, a, b, name="consume2", sim_s=0.1, pin="ibm")
+    orch = Orchestrator({"gcp": 1, "ibm": 1})
+    rec = orch.execute(pipe.compile())
+    assert rec.status == "succeeded"
+    tr = orch.log.named("pipeline:transfer")
+    assert len(tr) == 1                           # second consume: resident
+    assert tr[0]["src"] == "gcp" and tr[0]["dst"] == "ibm"
+    assert tr[0]["bytes"] == big.nbytes
+    # 125 MB over the 1.25 GB/s interconnect: ~0.1 s on the consume path
+    assert rec.steps["consume"].transfer_s == pytest.approx(
+        GCP.network_rtt_s + IBM.network_rtt_s + 0.1)
+    assert rec.steps["consume"].transfer_cost_usd == pytest.approx(
+        0.125 * GCP.egress_per_gb)
+    assert rec.steps["consume2"].transfer_s == 0.0
+
+
+def test_deploy_step_hands_model_to_gateway():
+    pipe = Pipeline("t2s")
+    model = pipe.step(lambda: {"w": 1.0}, name="train", sim_s=0.5)
+    pipe.step(lambda m: AnalyticBackend("ranker", 0.01, 0.001), model,
+              name="deploy", kind="deploy",
+              payload=DeploySpec(
+                  "ranker",
+                  clouds=[CloudCapacity(GCP, 2, 1.0),
+                          CloudCapacity(IBM, 4, 1.4)],
+                  load_erlangs=2.0, split=True,
+                  autoscaler=AutoscalerConfig(min_replicas=3, max_replicas=3,
+                                              idle_window_s=np.inf),
+                  max_batch=8))
+    spec = pipe.compile()
+    assert spec.steps[1].cache is False           # handoff is a side effect
+    gw = Gateway()
+    orch = Orchestrator({"gcp": 2, "ibm": 2}, policy="cost")
+    rec = orch.execute(spec, gateway=gw)
+    assert rec.status == "succeeded"
+    out = rec.outputs["deploy"]
+    # load 2.0 Erlangs / 0.7 target -> 3 replicas: gcp holds 2, ibm 1
+    assert out["replicas"] == {"gcp": 2, "ibm": 1}
+    assert sum(out["weights"].values()) == pytest.approx(1.0)
+    assert "ranker" in gw.deployments
+    assert orch.log.count("pipeline:deploy") == 1
+    # the deployed model serves real traffic through the gateway
+    served = gw.run([TrafficSpec("ranker", 16)], seed=0)
+    assert served.per_model["ranker"].n_requests == 16
+
+
+def test_failed_deploy_leaves_no_live_deployment():
+    """The Gateway.deploy side effect is applied on step COMPLETION: a
+    deploy step whose every attempt dies in an outage must not leave the
+    model serving in the fleet."""
+    pipe = Pipeline("dead-deploy")
+    m = pipe.step(lambda: 1, name="train", sim_s=0.2)
+    pipe.step(lambda _: AnalyticBackend("ghost", 0.01), m, name="deploy",
+              kind="deploy", pin="gcp",
+              payload=DeploySpec("ghost", clouds=[CloudCapacity(GCP, 4, 1.0)],
+                                 load_erlangs=1.0))
+    gw = Gateway()
+    orch = Orchestrator({"gcp": 1}, retry=RetryPolicy(max_retries=1,
+                                                      backoff_s=0.1))
+    # train ends ~3.2s; both deploy attempts die inside the windows
+    rec = orch.execute(pipe.compile(), gateway=gw,
+                       failures=[FailureSpec("gcp", 4.0, 0.2),
+                                 FailureSpec("gcp", 5.0, 3.0)])
+    assert rec.steps["deploy"].status == "failed"
+    assert "ghost" not in gw.deployments
+    assert orch.log.count("pipeline:deploy") == 0
+
+
+def test_deploy_infeasible_fails_run():
+    pipe = Pipeline("nofit")
+    m = pipe.step(lambda: 1, name="train", sim_s=0.1)
+    pipe.step(lambda _: AnalyticBackend("m", 0.01), m, name="deploy",
+              kind="deploy",
+              payload=DeploySpec("m", clouds=[CloudCapacity(GCP, 0, 1.0)],
+                                 load_erlangs=2.1))
+    orch = Orchestrator({"gcp": 1})
+    rec = orch.execute(pipe.compile(), gateway=Gateway())
+    assert rec.status == "failed"
+    assert orch.log.named("pipeline:fail")[0]["reason"] == "deploy_infeasible"
+
+
+def test_deploy_requires_gateway_and_payload():
+    pipe = Pipeline("bad")
+    pipe.step(lambda: AnalyticBackend("m", 0.01), name="d", kind="deploy",
+              payload=DeploySpec("m", clouds=[], load_erlangs=1.0))
+    with pytest.raises(ValueError, match="gateway"):
+        Orchestrator({"gcp": 1}).execute(pipe.compile())
+    with pytest.raises(ValueError, match="rate / load_erlangs"):
+        DeploySpec("m", clouds=[], rate=1.0, load_erlangs=1.0)
+    with pytest.raises(ValueError, match="kind"):
+        pipe.step(lambda: 1, kind="serve")
+
+
+def test_recurring_runs_share_cache_and_catch_up():
+    spec, calls = fanout_spec(cache=True)
+    orch = Orchestrator({"gcp": 2, "ibm": 2})
+    runs = PipelineRuns(orch)
+    recs = runs.recurring(spec, every_s=100.0, runs=3)
+    assert [r.run_id for r in recs] == ["fan-000", "fan-001", "fan-002"]
+    assert [r.t0 for r in recs] == [0.0, 100.0, 200.0]
+    assert recs[0].cache_hits == 0
+    assert all(r.cache_hits == len(spec.steps) for r in recs[1:])
+    assert all(v == 1 for v in calls.values())    # one real execution total
+    assert orch.log.count("pipeline:recurring") == 3
+    assert len(runs.history) == 3 and set(runs.summary()) == {
+        "fan-000", "fan-001", "fan-002"}
+    # a period shorter than the makespan catches up instead of overlapping
+    orch2 = Orchestrator({"gcp": 1})
+    recs2 = PipelineRuns(orch2).recurring(fanout_spec(cache=False)[0],
+                                          every_s=1.0, runs=2)
+    assert recs2[1].t0 >= recs2[0].finished_s
+
+
+def test_cache_hits_wait_out_an_outage_on_the_resident_cloud():
+    """A cached recurring run must still feel an injected outage: an
+    artifact resident only on a dead cloud cannot be fetched until the
+    cloud recovers."""
+    spec, _ = fanout_spec(cache=True)
+    orch = Orchestrator({"gcp": 1})
+    first = orch.execute(spec)                    # residency: all on gcp
+    rec = orch.execute(spec, t0=100.0,
+                       failures=[FailureSpec("gcp", 100.0, 2.0)])
+    assert rec.cache_hits == len(spec.steps)
+    # nothing could be served before the recovery edge at t=102
+    assert min(r.start_s for r in rec.steps.values()) >= 102.0
+    assert first.makespan_s > 1.0                 # and run 1 was real work
+
+
+def test_serial_cache_entry_reused_by_orchestrator(tmp_path):
+    """Pipeline.run and the orchestrator share one store record shape: a
+    step cached by the serial executor is a free hit for the orchestrator
+    (no residency -> no cloud to bill a transfer against, by design)."""
+    from repro.checkpoint.store import ArtifactStore
+
+    def make():
+        return [4, 2]
+
+    store = ArtifactStore(str(tmp_path))
+    serial = Pipeline("shared", store)
+    serial.step(make)
+    serial.run()
+    authored = Pipeline("shared")
+    authored.step(make)
+    orch = Orchestrator({"gcp": 1}, cache=ArtifactCache(store))
+    rec = orch.execute(authored.compile())
+    r = rec.steps["make"]
+    assert r.cached and r.cloud is None and r.transfer_cost_usd == 0.0
+    assert rec.outputs["make"] == [4, 2]
+
+
+def test_transfers_cannot_source_from_a_dead_cloud():
+    """An input artifact resident only on a mid-outage cloud blocks its
+    consumer (same rule as cache hits) instead of transferring bytes out
+    of a dead cluster at full speed."""
+    pipe = Pipeline("deadsrc")
+    a = pipe.step(lambda: [1], name="produce", sim_s=0.1, pin="ibm",
+                  cache=False)
+    slow = pipe.step(lambda: 2, name="slow", sim_s=3.5, pin="gcp",
+                     cache=False)
+    pipe.step(lambda x, y: x, a, slow, name="consume", sim_s=0.1,
+              pin="gcp", cache=False)
+    orch = Orchestrator({"gcp": 1, "ibm": 1})
+    # producer ends ~5.1 on ibm; consume becomes ready at ~6.5 (slow),
+    # inside the ibm outage [6, 9): its only input source is dead
+    rec = orch.execute(pipe.compile(), failures=[FailureSpec("ibm", 6.0, 3.0)])
+    assert rec.status == "succeeded"
+    assert rec.steps["consume"].start_s >= 9.0
+    tr = orch.log.named("pipeline:transfer")
+    assert len(tr) == 1 and tr[0]["src"] == "ibm" and tr[0]["t_sim"] >= 9.0
+
+
+def test_cache_hit_from_retired_cluster_charges_its_rtt(tmp_path):
+    """A store entry resident on a cloud outside this orchestrator's
+    cluster map still charges that cloud's control-plane RTT on a hit
+    (the same PROFILES fallback best_transfer uses)."""
+    from repro.checkpoint.store import ArtifactStore
+
+    def make():
+        return [7]
+
+    store = ArtifactStore(str(tmp_path))
+    pipe = Pipeline("retired")
+    pipe.step(make, sim_s=0.1)
+    spec = pipe.compile()
+    Orchestrator({"gcp": 1}, cache=ArtifactCache(store)).execute(spec)
+    rec = Orchestrator({"ibm": 1}, cache=ArtifactCache(store)).execute(spec)
+    r = rec.steps["make"]
+    assert r.cached and r.cloud == "gcp"
+    assert r.duration_s == pytest.approx(GCP.network_rtt_s)
+
+
+def test_seeded_determinism_of_simulated_timeline():
+    spec, _ = fanout_spec()
+    fails = [FailureSpec("gcp", 3.5, 1.0)]
+
+    def run():
+        orch = Orchestrator({"gcp": 2, "ibm": 2},
+                            retry=RetryPolicy(backoff_s=0.25))
+        rec = orch.execute(spec, failures=fails)
+        return rec.summary(), [e["name"] for e in orch.log.events]
+
+    s1, e1 = run()
+    s2, e2 = run()
+    assert s1 == s2 and e1 == e2
+
+
+def test_orchestrator_rejects_bad_configs():
+    with pytest.raises(ValueError, match="policy"):
+        Orchestrator({"gcp": 1}, policy="greedy")
+    with pytest.raises(ValueError, match="worker"):
+        Orchestrator({"gcp": 0})
+    with pytest.raises(ValueError, match="at least one"):
+        Orchestrator({})
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_s"):
+        RetryPolicy(backoff_s=0.0)
+
+
+def test_artifact_cache_persists_through_store(tmp_path):
+    from repro.checkpoint.store import ArtifactStore
+
+    pipe = Pipeline("persist")
+    a = pipe.step(lambda: [1, 2, 3], name="make", sim_s=0.1, pin="gcp")
+    # cache=False: the consumer re-executes every run, so run 2 genuinely
+    # re-consumes the artifact on ibm
+    pipe.step(lambda x: list(x), a, name="use", sim_s=0.1, pin="ibm",
+              cache=False)
+    spec = pipe.compile()
+    store = ArtifactStore(str(tmp_path))
+    orch1 = Orchestrator({"gcp": 1, "ibm": 1}, cache=ArtifactCache(store))
+    orch1.execute(spec)
+    assert orch1.log.count("pipeline:transfer") == 1
+    # a fresh process (fresh cache) reloads the JSON-able artifact AND its
+    # committed residency: the gcp->ibm move paid above is not re-billed
+    orch2 = Orchestrator({"gcp": 1, "ibm": 1}, cache=ArtifactCache(store))
+    rec = orch2.execute(spec)
+    assert rec.steps["make"].cached and not rec.steps["use"].cached
+    assert rec.outputs["make"] == [1, 2, 3]
+    assert orch2.log.count("pipeline:transfer") == 0
+    assert rec.steps["use"].transfer_cost_usd == 0.0

@@ -91,3 +91,73 @@ def test_stage_timing_recorded(tmp_path):
     p.run()
     names = [e["name"] for e in p.log.events]
     assert "seven" in names and "pipeline:timed" in names
+
+
+def test_same_function_steps_get_numbered_names(tmp_path):
+    """Two steps built from the same function must not share a name (the
+    pre-fix {name: output} dict dropped the earlier output)."""
+    p = Pipeline("dup", ArtifactStore(str(tmp_path)))
+    a = p.step(seven)
+    b = p.step(double, a)
+    p.step(double, b)
+    assert [s.name for s in p.steps] == ["seven", "double", "double_2"]
+    out = p.run()
+    assert out["double"] == 14 and out["double_2"] == 28
+
+
+def test_step_name_suffix_never_collides_with_explicit_name(tmp_path):
+    """Regression (fails pre-fix): the generated dedup suffix used the step
+    COUNT without re-checking, so it could silently collide with an
+    explicit name ('double_2' here) and drop an output."""
+    p = Pipeline("collide", ArtifactStore(str(tmp_path)))
+    p.step(seven, name="double_2")
+    p.step(double, 3)
+    p.step(double, 4)
+    names = [s.name for s in p.steps]
+    assert len(set(names)) == len(names), names
+    out = p.run()
+    assert len(out) == 3
+    assert out["double_2"] == 7 and out["double"] == 6
+    assert out["double_3"] == 8
+
+
+def test_toposort_deterministic_insertion_order():
+    from repro.core.pipeline import toposort
+
+    p = Pipeline("order")
+    refs = [p.step(seven, name=f"s{i}") for i in range(5)]
+    p.step(add, refs[4], refs[0], name="sink")
+    # independent steps run in insertion-index order, every time
+    assert p._toposort() == [0, 1, 2, 3, 4, 5]
+    # diamond: children unlock in insertion order (deque FIFO)
+    assert toposort([[], [0], [0], [1, 2]]) == [0, 1, 2, 3]
+    with pytest.raises(ValueError, match="cycle"):
+        toposort([[1], [0]])
+
+
+def test_compile_lowers_to_pipeline_spec():
+    p = Pipeline("c")
+    a = p.step(seven)
+    p.step(double, a, sim_s=0.5, pin="gcp")
+    spec = p.compile()
+    assert [s.name for s in spec.steps] == ["seven", "double"]
+    assert spec.steps[1].deps == (0,)
+    assert spec.steps[1].sim_s == 0.5 and spec.steps[1].pin == "gcp"
+    d = spec.to_dict()
+    assert d["spec"]["steps"][1]["dependencies"] == ["seven"]
+
+
+def test_serial_and_compiled_cache_keys_agree(tmp_path):
+    """The serial executor and the orchestrator share step_cache_key: a
+    step cached by Pipeline.run is a hit for an orchestrator run."""
+    from repro.core.pipeline import step_cache_key
+
+    store = ArtifactStore(str(tmp_path))
+    p = Pipeline("shared", store)
+    p.step(double, 5, name="d")
+    p.run()
+    spec = p.compile()
+    s = spec.steps[0]
+    key = step_cache_key(spec.name, s.name, s.fn, (5,), {})
+    assert store.exists(key)
+    assert store.load_json(key)["value"] == 10
