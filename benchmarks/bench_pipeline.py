@@ -47,10 +47,12 @@ from repro.models import lenet
 from repro.pipelines import Orchestrator, PipelineRuns, RetryPolicy
 from repro.serving.gateway import FailureSpec
 from repro.serving.kserve import InferenceService, Predictor
+from repro.telemetry.analyze import run_breakdown, run_table
+from repro.telemetry.trace import Tracer
 from repro.tuning import katib
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_pipelines.json"
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
 N_BRANCHES = 6
 
 
@@ -69,13 +71,22 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
     if "race" in sc:
         r = sc["race"]
         for k in ("serial_s", "orchestrated_s", "speedup", "retries",
-                  "exactly_once", "sim_cost_usd", "branches"):
+                  "exactly_once", "sim_cost_usd", "branches",
+                  "critical_path"):
             if k not in r:
                 raise ValueError(f"race missing {k}")
         if r["speedup"] < 1.5:
             raise ValueError(f"race speedup {r['speedup']} < 1.5")
         if r["retries"] < 1 or not r["exactly_once"]:
             raise ValueError(f"race must recover injected failures: {r}")
+        cp = r["critical_path"]
+        if not cp or cp[-1]["step"] != "train":
+            raise ValueError(f"race critical path must end at train: {cp}")
+        for row in cp:
+            for k in ("step", "cloud", "total_s", "control_s",
+                      "transfer_s", "compute_s", "wait_s"):
+                if k not in row:
+                    raise ValueError(f"critical path row missing {k}")
     if "recurring" in sc:
         r = sc["recurring"]
         for k in ("runs", "first_run_s", "cached_run_s", "cache_hits",
@@ -214,11 +225,19 @@ def _race(bench: dict, *, analytic: bool) -> list:
     outage = FailureSpec("gcp", prep_end + gcp.startup_s
                          + 0.2 * min(tune_d), 1.0)
 
+    tracer = Tracer()
     orch = Orchestrator({"gcp": 3, "ibm": 3}, policy="makespan",
-                        retry=RetryPolicy(max_retries=2, backoff_s=0.3))
+                        retry=RetryPolicy(max_retries=2, backoff_s=0.3),
+                        tracer=tracer)
     rec = orch.execute(spec, failures=[outage])
 
     assert rec.status == "succeeded", rec.summary()
+    # trace-derived per-stage attribution (the paper's Tables 4/5 as an
+    # analyzer output): the chain bounding the makespan must run through
+    # the terminal train step
+    cpath = run_breakdown(tracer, rec.span_id)
+    assert cpath and cpath[-1]["step"] == "train", cpath
+    print(run_table(tracer, rec.span_id), file=sys.stderr)
     retries = orch.log.count("pipeline:retry")
     assert retries >= 1, "the outage must have killed at least one attempt"
     # exactly-once through the failures: every step done with ONE
@@ -247,6 +266,9 @@ def _race(bench: dict, *, analytic: bool) -> list:
         "exactly_once": exactly_once,
         "outage": {"cloud": outage.cloud, "at_s": round(outage.at_s, 4),
                    "duration_s": outage.duration_s},
+        "critical_path": [
+            {k: round(v, 4) if isinstance(v, float) else v
+             for k, v in row.items()} for row in cpath],
         "sim_cost_usd": round(rec.cost_usd, 8),
         "steps": {n: {"cloud": r.cloud, "sim_s": round(r.duration_s, 4),
                       "attempts": len(r.attempts)}

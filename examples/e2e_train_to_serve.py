@@ -10,6 +10,12 @@ cross-run cache (only the deploy step re-executes: the handoff is a side
 effect), so the run collapses to control-plane time -- the Kubeflow
 step-caching headline, now under the orchestrator's simulated clusters.
 
+One Tracer is shared by the orchestrator and the gateway (ISSUE 6), so
+the pipeline's span tree and the serving spans form a SINGLE connected
+trace: every served request's span links back to the deploy step that
+produced the model, and the analyzer derives the run critical path and
+the slowest-request stage breakdown from the spans alone.
+
 Per DESIGN.md §1: stage compute and backend service times are MEASURED on
 this host; startup / RTT / transfer / dollar figures derive from the
 CloudProfile constants and are simulation outputs.
@@ -29,7 +35,11 @@ from repro.models import lenet
 from repro.pipelines import DeploySpec, Orchestrator, PipelineRuns
 from repro.serving.gateway import (AutoscalerConfig, CloudCapacity, Gateway,
                                    Predictor, TrafficSpec)
+from repro.telemetry.analyze import (request_table, run_table,
+                                     validate_trace)
 from repro.telemetry.events import EventLog
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.trace import Tracer
 from repro.tuning import katib
 
 
@@ -78,9 +88,12 @@ def main():
     spec = pipe.compile()
 
     log = EventLog()
-    gw = Gateway(log=log)
+    tracer = Tracer()                    # ONE tracer spans train AND serve
+    registry = MetricsRegistry()
+    gw = Gateway(log=log, tracer=tracer, metrics=registry)
     # cost policy: tuning + training land on the CHEAPEST simulated cloud
-    orch = Orchestrator({"gcp": 2, "ibm": 2}, policy="cost", log=log)
+    orch = Orchestrator({"gcp": 2, "ibm": 2}, policy="cost", log=log,
+                        tracer=tracer)
     runs = PipelineRuns(orch)
     recs = runs.recurring(spec, every_s=300.0, runs=2, gateway=gw)
 
@@ -108,6 +121,17 @@ def main():
     print(f"total simulated cost (2 pipeline runs + serving): ${total:.6f} "
           "(price-sheet output, not a measurement)")
 
+    # trace-derived tables (the paper's per-stage attribution, computed
+    # from the span tree instead of hand-kept timers)
+    print()
+    print(run_table(tracer, recs[0].span_id))
+    print()
+    print(request_table(tracer, 3, model="mnist"))
+    n_served = registry.total("gateway_requests_total", outcome="served")
+    print(f"\nmetrics: served={n_served:.0f} "
+          f"misses={registry.total('gateway_deadline_miss_total'):.0f} "
+          f"spans={len(tracer.spans)}")
+
     # acceptance: cheapest-cloud training, split deploy, cached rerun,
     # and the deployed model actually served the traffic
     assert all(r.status == "succeeded" for r in recs)
@@ -120,6 +144,17 @@ def main():
     assert res.n_requests == 512 and len(res.latencies_s) == 512
     assert log.count("pipeline:deploy") == 2
     assert served.makespan_s > 0
+    # ISSUE 6 acceptance: the pipeline trace and the serving trace are ONE
+    # connected component -- walking from the second recurring run's root
+    # (its deploy step produced the served model) reaches every served
+    # request span through the deploy-step link
+    assert not validate_trace(tracer)
+    linked = tracer.reachable(recs[1].span_id)
+    request_roots = [s for s in tracer.named("gateway.request")
+                     if s.attrs.get("outcome") == "served"]
+    assert request_roots
+    assert all(s.span_id in linked for s in request_roots)
+    assert n_served == len(request_roots) == 512
 
 
 if __name__ == "__main__":

@@ -64,6 +64,7 @@ class StepRecord:
     transfer_cost_usd: float = 0.0
     cost_usd: float = 0.0
     attempts: list = dataclasses.field(default_factory=list)
+    span_id: Optional[int] = None        # pipeline.step span (tracer runs)
 
     @property
     def retries(self) -> int:
@@ -87,6 +88,8 @@ class RunRecord:
     outputs: dict                        # name -> value (done steps only)
     cost_usd: float = 0.0
     cache_hits: int = 0
+    span_id: Optional[int] = None        # pipeline.run span (tracer runs):
+    # the handle telemetry/analyze.py run_critical_path / run_table take
 
     @property
     def makespan_s(self) -> float:

@@ -109,6 +109,8 @@ class _StepState:
         # applied on successful COMPLETION only: a permanently failed
         # deploy step must not leave a live deployment behind
         self.pending: Optional[dict] = None   # in-flight attempt bookkeeping
+        self.span = None                 # pipeline.step span (tracer only)
+        self.attempt_span = None         # current pipeline.attempt span
 
 
 class Orchestrator:
@@ -123,7 +125,8 @@ class Orchestrator:
     def __init__(self, clusters: dict, *, policy: str = "makespan",
                  retry: Optional[RetryPolicy] = None,
                  cache: Optional[ArtifactCache] = None,
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None,
+                 tracer=None, metrics=None):
         if policy not in ("cost", "makespan"):
             raise ValueError(f"unknown policy {policy!r}")
         self.pools: dict[str, _WorkerPool] = {}
@@ -140,6 +143,14 @@ class Orchestrator:
         self.retry = retry or RetryPolicy()
         self.cache = cache if cache is not None else ArtifactCache()
         self.log = log or EventLog()
+        # observability plane (DESIGN.md S5): pipeline.run > pipeline.step
+        # > pipeline.attempt > pipeline.transfer span tree on the simulated
+        # clock, plus pipeline_* metric series.  Share the tracer with the
+        # serving Gateway and the terminal deploy step links the serving
+        # trace to this one (Deployment.trace_link).
+        self.tracer = tracer
+        self.metrics = metrics
+        self._run_span = None            # open pipeline.run span (execute)
 
     # -- outage windows ------------------------------------------------------
     @staticmethod
@@ -229,6 +240,10 @@ class Orchestrator:
         windows = self._windows(failures)
         for pool in self.pools.values():
             pool.busy = 0
+        if self.tracer is not None:
+            self._run_span = self.tracer.start(
+                "pipeline.run", float(t0), run_id=run_id,
+                pipeline=spec.name)
 
         st = [_StepState(StepRecord(s.name)) for s in spec.steps]
         children: list = [[] for _ in spec.steps]
@@ -301,6 +316,12 @@ class Orchestrator:
             if s.deploy_apply is not None:
                 # the handoff side effect happens exactly once, HERE: a
                 # deploy step that never completes never touches the fleet
+                if self.tracer is not None and s.span is not None:
+                    # the serving gateway links every request span of this
+                    # model back to THIS deploy step span: the cross-trace
+                    # edge that makes one train-to-serve run one connected
+                    # trace (telemetry/trace.py)
+                    s.deploy_apply["trace_link"] = s.span.span_id
                 gateway.deploy(**s.deploy_apply)
                 s.deploy_apply = None
             if s.deploy_info is not None:
@@ -310,6 +331,21 @@ class Orchestrator:
                             cloud=pend["cloud"], cached=pend["cached"],
                             attempts=len(rec.attempts),
                             cost=round(rec.cost_usd, 10), t_sim=round(t, 6))
+            if self.tracer is not None:
+                sp = pend.get("span")
+                if sp is not None and sp.t1 is None:
+                    self.tracer.end(sp, t)
+                if s.span is not None:
+                    self.tracer.end(s.span, t, cloud=pend["cloud"],
+                                    cached=pend["cached"], status="done")
+                    rec.span_id = s.span.span_id
+            if self.metrics is not None:
+                self.metrics.histogram("pipeline_step_seconds",
+                                       pipeline=spec.name,
+                                       step=names[i]).observe(pend["dur"])
+                if pend["cached"]:
+                    self.metrics.counter("pipeline_cache_hits_total",
+                                         pipeline=spec.name).inc()
             for j in children[i]:
                 indeg[j] -= 1
                 if indeg[j] == 0 and st[j].status == "pending":
@@ -325,6 +361,13 @@ class Orchestrator:
             self.log.record("pipeline:fail", 0.0, step=names[i],
                             attempts=len(st[i].record.attempts),
                             reason=reason, t_sim=round(t, 6))
+            if self.tracer is not None and st[i].span is not None:
+                if st[i].attempt_span is not None \
+                        and st[i].attempt_span.t1 is None:
+                    self.tracer.end(st[i].attempt_span, t, status=reason)
+                self.tracer.end(st[i].span, t, status="failed",
+                                reason=reason)
+                st[i].record.span_id = st[i].span.span_id
             cascade_skip(i, t)
 
         def schedule(t: float) -> None:
@@ -379,12 +422,23 @@ class Orchestrator:
                         self.log.record("pipeline:cache_hit", 0.0,
                                         step=names[i], key=key,
                                         cloud=home, t_sim=round(t, 6))
+                        hit_span = None
+                        if self.tracer is not None:
+                            if s.span is None:
+                                s.span = self.tracer.start(
+                                    "pipeline.step", t,
+                                    parent=self._run_span, step=names[i],
+                                    deps=[names[d] for d in step.deps])
+                            hit_span = self.tracer.start(
+                                "pipeline.attempt", t, parent=s.span,
+                                cloud=home, cached=True, control_s=rtt,
+                                transfer_s=0.0, compute_s=0.0)
                         heapq.heappush(events, (
                             t + rtt, next(seq), "done",
                             (i, {"cloud": home, "cached": True,
                                  "value": entry.value, "entry": entry,
                                  "dur": rtt, "cost": 0.0, "key": None,
-                                 "transfers": []})))
+                                 "transfers": [], "span": hit_span})))
                         continue
                 if self._inputs_blocked(st, step, windows, t):
                     continue             # inputs live only on dead clouds:
@@ -434,6 +488,16 @@ class Orchestrator:
                     s.record.attempts[-1]["cost_usd"] = cost
                     s.record.cost_usd += cost
                     t_last = max(t_last, t)
+                    if self.tracer is not None:
+                        # the outage truncates the attempt (and any
+                        # in-flight transfer child) at the window start
+                        for tsp in pend.get("spans", ()):
+                            if tsp.t1 is None or tsp.t1 > t:
+                                self.tracer.end(tsp, t, truncated=True)
+                        if s.attempt_span is not None \
+                                and s.attempt_span.t1 is None:
+                            self.tracer.end(s.attempt_span, t,
+                                            status="outage")
                     n_att = len(s.record.attempts)
                     if n_att > self.retry.max_retries:
                         perm_fail(i, t, "outage")
@@ -466,6 +530,15 @@ class Orchestrator:
                         pipeline=spec.name, status=status,
                         cost=round(rec.cost_usd, 10),
                         wall_s=round(time.perf_counter() - wall0, 4))
+        if self.tracer is not None and self._run_span is not None:
+            self.tracer.end(self._run_span, t_last, status=status)
+            rec.span_id = self._run_span.span_id
+            self._run_span = None
+        if self.metrics is not None:
+            self.metrics.counter("pipeline_runs_total", pipeline=spec.name,
+                                 status=status).inc()
+            self.metrics.counter("pipeline_cost_usd_total",
+                                 pipeline=spec.name).inc(rec.cost_usd)
         return rec
 
     # -- attempt machinery ---------------------------------------------------
@@ -500,6 +573,13 @@ class Orchestrator:
         cloud = pool.profile.name
         tr_s = sum(x[2] for x in transfers)
         tr_usd = sum(x[3] for x in transfers)
+        if self.tracer is not None and s.span is None:
+            # opened on the FIRST attempt (exception paths included) and
+            # closed by finish/perm_fail; deps attr carries the dependency
+            # step names the critical-path walk follows
+            s.span = self.tracer.start(
+                "pipeline.step", t, parent=self._run_span, step=names,
+                deps=[spec.steps[d].name for d in step.deps])
         if not s.executed:
             args = tuple(self._resolve(st, a) for a in step.args)
             kwargs = {k: self._resolve(st, v)
@@ -542,20 +622,40 @@ class Orchestrator:
         pool.busy += 1
         self.log.record("pipeline:schedule", 0.0, step=names, cloud=cloud,
                         attempt=len(s.record.attempts), t_sim=round(t, 6))
+        att_span = None
+        tspans = []
+        if self.tracer is not None:
+            # attempt attrs carry the simulated-time decomposition the
+            # critical-path analyzer reads back: control (startup + rtt +
+            # deploy model loads), transfer, compute
+            att_span = s.attempt_span = self.tracer.start(
+                "pipeline.attempt", t, parent=s.span, cloud=cloud,
+                attempt=len(s.record.attempts),
+                control_s=(pool.profile.startup_s
+                           + pool.profile.network_rtt_s + s.extra_s),
+                transfer_s=tr_s, compute_s=s.compute_s)
         for d, src, t_tr, usd, nb in transfers:
             self.log.record("pipeline:transfer", t_tr, step=names,
                             src=src, dst=cloud, bytes=int(nb),
                             cost=round(usd, 10), t_sim=round(t, 6))
+            if self.tracer is not None:
+                tsp = self.tracer.start("pipeline.transfer", t,
+                                        parent=att_span, src=src, dst=cloud,
+                                        bytes=int(nb))
+                self.tracer.end(tsp, t + t_tr)
+                tspans.append(tsp)
         t_f = self._fails_at(windows, cloud, t, t_end)
         if t_f is not None:
-            s.pending = {"cloud": cloud, "start": t, "tr_usd": tr_usd}
+            s.pending = {"cloud": cloud, "start": t, "tr_usd": tr_usd,
+                         "spans": tspans}
             heapq.heappush(events, (t_f, next(seq), "abort", i))
             return
         cost = dur * pool.profile.cost_per_s + tr_usd
         heapq.heappush(events, (t_end, next(seq), "done",
                                 (i, {"cloud": cloud, "cached": False,
                                      "dur": dur, "cost": cost, "key": key,
-                                     "transfers": transfers})))
+                                     "transfers": transfers,
+                                     "span": att_span})))
 
     def _plan_handoff(self, step, s: _StepState) -> bool:
         """Deploy planning: size a placement from the backend's measured

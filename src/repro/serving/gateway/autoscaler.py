@@ -68,12 +68,16 @@ class Autoscaler:
                 and pool < self.cfg.max_replicas)
 
     @staticmethod
-    def effective_queue(queue_len: int, shed_pressure: int) -> int:
+    def effective_queue(queue_len: int, shed_pressure: int,
+                        alert_pressure: int = 0) -> int:
         """Queue depth as the scaling policy should see it: the real queue
         plus the requests admission control shed since the last launch or
-        probe window.  Shedding keeps queues short by design; without this
-        term an overloaded, hard-shedding pool would never scale up."""
-        return queue_len + shed_pressure
+        probe window, plus ``alert_pressure`` from an active SLO burn-rate
+        alert (telemetry/slo.py BurnRateMonitor.pressure: a model burning
+        its error budget scales up BEFORE the queue alone would tip the
+        rule).  Shedding keeps queues short by design; without these terms
+        an overloaded, hard-shedding pool would never scale up."""
+        return queue_len + shed_pressure + alert_pressure
 
     def can_remove(self, pool: int, floor: Optional[int] = None) -> bool:
         """``floor`` is the pool's apportioned share of min_replicas; a

@@ -333,7 +333,9 @@ def diff_plans(old: PlacementPlan, new: PlacementPlan) -> MigrationPlan:
 
 def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
            objective: Optional[str] = None,
-           split: Optional[bool] = None) -> PlacementPlan:
+           split: Optional[bool] = None,
+           alerts: Optional[set] = None,
+           alert_headroom: float = 1.25) -> PlacementPlan:
     """Re-plan from OBSERVED load (closing the estimate -> measure ->
     re-plan loop, MLModelCI analog): each model's demand is rebuilt from
     the arrival rate and realized per-request service time the gateway
@@ -345,18 +347,30 @@ def replan(plan: PlacementPlan, result, *, clouds: Optional[list] = None,
     defaults to whatever the original plan allowed.  Models in the original
     plan that saw no traffic this window (Gateway.run omits them from
     per_model) keep their prior assignment: their replicas stay reserved,
-    so the revised capacity_map still covers the whole fleet."""
+    so the revised capacity_map still covers the whole fleet.
+
+    ``alerts`` is a set of model names under an SLO burn-rate alert
+    (telemetry/slo.py: BurnRateMonitor.alerting_models(), or the models in
+    the run's ``gateway:alert`` events): the observed rate alone UNDERSTATES
+    their demand (it is what the overloaded fleet managed to absorb, sheds
+    included only as a count), so their demand is inflated by
+    ``alert_headroom`` before placement."""
     clouds = list(clouds) if clouds is not None else list(plan.clouds)
     if not clouds:
         raise ValueError("replan needs the CloudCapacity list: the original "
                          "plan carries none (pass clouds=...)")
+    if alert_headroom < 1.0:
+        raise ValueError("alert_headroom must be >= 1")
     demands = []
     for name in sorted(result.per_model):
         obs = result.per_model[name].observed
         if not obs:
             raise ValueError(f"no observed load for {name!r}: run the "
                              "traffic through Gateway.run first")
-        demands.append(ModelDemand(name, obs["rate_rps"],
+        rate = obs["rate_rps"]
+        if alerts and name in alerts:
+            rate *= alert_headroom
+        demands.append(ModelDemand(name, rate,
                                    obs["service_time_s"]))
     kept = [a for a in plan.assignments if a.model not in result.per_model]
     reserve: dict = {}

@@ -89,6 +89,9 @@ import numpy as np
 
 from ...clouds.profiles import CloudProfile, get_profile
 from ...telemetry.events import EventLog
+from ...telemetry.metrics import MetricsRegistry
+from ...telemetry.slo import BurnRateConfig, BurnRateMonitor
+from ...telemetry.trace import Tracer
 from .autoscaler import Autoscaler, AutoscalerConfig, PoolView
 from .placement import MigrationStep
 
@@ -418,6 +421,21 @@ def _pow2(b: int) -> int:
     return n
 
 
+# the self-rescheduling event kinds: once no work is left and only these
+# remain, the periodic probe / scrape timers must stop re-arming --
+# re-pushing while "events is non-empty" would let the two timers sustain
+# EACH OTHER through an unbounded dead tail after the last request
+# completes.  Pending "idle" checks deliberately keep the timers alive:
+# they are one-shot (never re-pushed), so the tail is bounded by the idle
+# window, and the probe must stay armed through it for post-traffic cost
+# consolidation (idle split folds onto the cheap cloud, stragglers retire)
+_TIMER_KINDS = frozenset(("probe", "scrape"))
+
+
+def _only_timers(events: list) -> bool:
+    return all(e[2] in _TIMER_KINDS for e in events)
+
+
 def _apportion(total: int, weights: dict) -> dict:
     """Largest-remainder split of ``total`` replicas by weight (zero-weight
     pools get zero); deterministic tie-break by remainder, weight, name.
@@ -491,6 +509,10 @@ class Deployment:
     queue_hint: dict = dataclasses.field(default_factory=dict)
     # {cloud: expected queueing wait s} planner prior (Assignment.est_wait_s)
     # used by queue-aware routing while a pool has no queue of its own yet
+    trace_link: Optional[int] = None
+    # span id of the pipeline deploy step that produced this deployment
+    # (telemetry/trace.py): every request root span links to it, connecting
+    # the serving trace to the training trace across their sim-time axes
 
     @property
     def backends(self) -> list:
@@ -576,6 +598,19 @@ class _ModelState:
         self.win_epoch = 0               # bumps on probe reset: a reclaim
         self.streak = {"hot": 0, "cold": 0}   # only undoes its own window
         self.streak_why = "overload"     # what armed the hot streak
+        # deferred-telemetry collector state (the sim analog of an async
+        # span processor): with a Tracer attached the event loop only
+        # appends per-BATCH records here (amortized ~nothing per request)
+        # and the span tree is materialized in bulk after the loop; with a
+        # MetricsRegistry attached, counters and latency sketches are
+        # folded vectorized from the arrays below at each scrape.  All
+        # None when untraced, so the bare hot path pays nothing.
+        self.batch_recs: Optional[list] = None   # dispatch-order batch dicts
+        self.shed_at: dict = {}          # idx -> (t, where, cloud)
+        self.fold_pending: Optional[list] = None   # really-completed
+        # batches awaiting the next metric fold: (idx, cls, miss threshold)
+        self.fold_inst: dict = {}        # cname -> cached instruments
+        self.gauge_inst: dict = {}       # cloud -> cached scrape gauges
 
     def total_pool(self) -> int:
         return sum(p.size() for p in self.pools.values())
@@ -657,6 +692,22 @@ class Gateway:
     completion already exceeds their class deadline (None = admit all,
     the legacy behavior InferenceService relies on).
 
+    tracer: optional telemetry.trace.Tracer -- every run opens a
+    ``gateway.run`` root span and each request gets a ``gateway.request``
+    span with ``gateway.queue`` / ``gateway.serve`` children crossing
+    shed, preemption, failover and migration; request roots link to the
+    deployment's ``trace_link`` (the pipeline deploy step span).
+
+    metrics: optional telemetry.metrics.MetricsRegistry -- request /
+    shed / miss counters, latency histograms (quantile sketches) and, with
+    ``scrape_every_s``, periodic simulated-time scrape snapshots of queue
+    depth / replicas / accrued cost gauges.
+
+    slo_burn: optional telemetry.slo.BurnRateConfig -- a BurnRateMonitor
+    (``self.burn``) watches per-(model, class) error-budget burn, emits
+    ``gateway:alert`` events, arms replan probes (reason=slo_burn) and
+    adds scale-up pressure via Autoscaler.effective_queue.
+
     record_batches=True keeps a per-batch audit trail (batch_log) and a
     per-cloud usage trace (usage_trace) for the invariant test suite.
     After run(), ``final_weights`` holds each model's normalized live
@@ -668,6 +719,10 @@ class Gateway:
                  replan: Optional[ReplanConfig] = None,
                  routing: Optional[RoutingConfig] = None,
                  admission: Optional[AdmissionConfig] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 slo_burn: Optional[BurnRateConfig] = None,
+                 scrape_every_s: Optional[float] = None,
                  record_batches: bool = False):
         self.deployments: dict[str, Deployment] = {}
         self.capacity = dict(capacity or {})
@@ -675,16 +730,25 @@ class Gateway:
         self.replan = replan
         self.routing = routing or RoutingConfig()
         self.admission = admission
+        self.tracer = tracer
+        self.metrics = metrics
+        self.burn = (BurnRateMonitor(slo_burn, log=self.log, metrics=metrics)
+                     if slo_burn is not None else None)
+        if scrape_every_s is not None and scrape_every_s <= 0:
+            raise ValueError("scrape_every_s must be > 0")
+        self.scrape_every_s = scrape_every_s
         self.record_batches = record_batches
         self.batch_log: list = []        # dicts, one per dispatched batch
         self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
         self.final_weights: dict = {}    # model -> {cloud: weight} post-run
+        self._run_span = None            # open gateway.run span during run()
 
     def deploy(self, name: str, backend, profile: Optional[CloudProfile] = None,
                *, split: Optional[dict] = None, autoscaler=None,
                max_batch: int = 32, canary=None, canary_fraction: float = 0.0,
                standby: Optional[CloudProfile] = None,
-               queue_hint: Optional[dict] = None) -> Deployment:
+               queue_hint: Optional[dict] = None,
+               trace_link: Optional[int] = None) -> Deployment:
         """``profile`` places the model on one cloud (weight 1.0);
         ``split={CloudProfile: weight}`` places it active-active (weights
         must sum to 1).  With both, ``profile`` names the primary among the
@@ -692,7 +756,10 @@ class Gateway:
         ``standby`` adds a zero-weight pool that failover shifts into.
         ``queue_hint`` ({cloud: expected wait s}, e.g. the placement
         plan's Assignment.est_wait_s) seeds queue-aware routing before a
-        pool has any queue of its own."""
+        pool has any queue of its own.  ``trace_link`` is the span id of
+        the pipeline deploy step that produced this model (the orchestrator
+        passes it through deploy_apply): request spans link to it, so one
+        train-to-serve run yields a single connected trace."""
         if isinstance(autoscaler, AutoscalerConfig):
             autoscaler = Autoscaler(autoscaler)
         if split:
@@ -721,7 +788,7 @@ class Gateway:
                 if math.isfinite(w)}
         dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
                          max_batch, canary, canary_fraction, standby,
-                         placements, hint)
+                         placements, hint, trace_link)
         self.deployments[name] = dep
         return dep
 
@@ -732,6 +799,11 @@ class Gateway:
         self.batch_log = []              # audit trails cover ONE run
         self.usage_trace = []
         self.final_weights = {}
+        if self.burn is not None:
+            self.burn.reset()            # windows are run-scoped
+        if self.tracer is not None:
+            self._run_span = self.tracer.start("gateway.run", 0.0,
+                                               seed=int(seed))
         rng = np.random.default_rng(seed)
         by_model: dict[str, list] = {}
         for spec in traffic:
@@ -759,6 +831,21 @@ class Gateway:
                 ver = (rng.random(len(arr)) < dep.canary_fraction).astype(int)
             route_u = rng.random(len(arr))
             s = st[m] = _ModelState(dep, arr, ver, cls, route_u)
+            if self.tracer is not None:
+                s.batch_recs = []
+            if self.metrics is not None and len(arr):
+                s.fold_pending = []
+                reg = self.metrics
+                s.fold_inst = {cname: (
+                    reg.counter("gateway_requests_total", model=m,
+                                cls=cname, outcome="served"),
+                    reg.counter("gateway_deadline_miss_total", model=m,
+                                cls=cname),
+                    reg.histogram("gateway_request_latency_seconds",
+                                  model=m, cls=cname),
+                    reg.counter("gateway_requests_total", model=m,
+                                cls=cname, outcome="shed"),
+                ) for cname in s.slo_by_name}
             floors = _apportion(dep.autoscaler.cfg.min_replicas,
                                 {c: p.weight for c, p in s.pools.items()})
             for c, pool in s.pools.items():
@@ -800,102 +887,123 @@ class Gateway:
         if self.replan is not None:
             heapq.heappush(events, (float(self.replan.check_every_s),
                                     next(seq), "probe", "", None))
+        if self.metrics is not None and self.scrape_every_s is not None:
+            heapq.heappush(events, (float(self.scrape_every_s),
+                                    next(seq), "scrape", "", None))
 
-        with self.log.stage("gateway:run", models=sorted(by_model),
-                            n=int(sum(len(x.arr) for x in st.values()))):
-            while events:
-                t = events[0][0]
-                touched, idle_checks = set(), []
-                probe_due = False
-                # apply every state change at time t before dispatching so a
-                # burst admits as full batches (pre-gateway sim semantics);
-                # probes run after dispatch (leftover queues are real
-                # pressure); idle expiries run last so a coincident arrival
-                # wins the replica instead of forcing a retire + cold start
-                while events and events[0][0] == t:
-                    _, _, kind, m, data = heapq.heappop(events)
-                    if kind == "fail":
-                        down[data] = down.get(data, 0) + 1
-                        if down[data] == 1:
-                            touched |= self._outage_edge(
-                                st, t, down, events, seq, reason="fail",
-                                cloud=data)
-                        continue
-                    if kind == "recover":
-                        down[data] -= 1
-                        if down[data] == 0:
-                            del down[data]
-                            touched |= self._outage_edge(
-                                st, t, down, events, seq, reason="recover",
-                                cloud=data)
-                        continue
-                    if kind == "replan":
-                        touched |= self._apply_migration(
-                            st, t, data.plan, events, seq, down)
-                        continue
-                    if kind == "probe":
-                        probe_due = True
-                        continue
-                    s = st[m]
-                    if kind == "arr":
-                        pool = self._route(s, data)
-                        if self._admit(s, pool, data, t):
-                            key = (int(s.ver[data]), s.cls[data].name)
-                            pool.pending.setdefault(key, []).append(data)
-                        touched.add(m)
-                    elif kind == "up":
-                        cloud, gen, forced_cold = data
-                        pool = s.pools[cloud]
-                        if gen != pool.generation:
-                            continue     # scheduled before a drain
-                        pool.scheduled_up -= 1
-                        warm = (not s.dep.autoscaler.cfg.cold_scale_up
-                                and not forced_cold)
-                        pool.replicas[s.next_rid] = _Replica(
-                            s.next_rid, warm=warm, last_active=t, created_s=t)
-                        if s.dep.autoscaler.tracks_idle:
-                            # a replica that joins after the queue drained
-                            # would otherwise never get an idle check
+        # gateway:run is recorded AFTER the loop with the SIMULATED makespan
+        # as its duration (wall_s meta carries the real wall), mirroring
+        # pipeline:run -- so dump() stays byte-stable under a fixed seed
+        _wall0 = time.perf_counter()
+        t_last = 0.0
+        while events:
+            t = events[0][0]
+            t_last = t
+            touched, idle_checks = set(), []
+            probe_due = scrape_due = False
+            # apply every state change at time t before dispatching so a
+            # burst admits as full batches (pre-gateway sim semantics);
+            # probes run after dispatch (leftover queues are real
+            # pressure); idle expiries run last so a coincident arrival
+            # wins the replica instead of forcing a retire + cold start
+            while events and events[0][0] == t:
+                _, _, kind, m, data = heapq.heappop(events)
+                if kind == "fail":
+                    down[data] = down.get(data, 0) + 1
+                    if down[data] == 1:
+                        touched |= self._outage_edge(
+                            st, t, down, events, seq, reason="fail",
+                            cloud=data)
+                    continue
+                if kind == "recover":
+                    down[data] -= 1
+                    if down[data] == 0:
+                        del down[data]
+                        touched |= self._outage_edge(
+                            st, t, down, events, seq, reason="recover",
+                            cloud=data)
+                    continue
+                if kind == "replan":
+                    touched |= self._apply_migration(
+                        st, t, data.plan, events, seq, down)
+                    continue
+                if kind == "probe":
+                    probe_due = True
+                    continue
+                if kind == "scrape":
+                    scrape_due = True
+                    continue
+                s = st[m]
+                if kind == "arr":
+                    pool = self._route(s, data)
+                    if self._admit(s, pool, data, t):
+                        key = (int(s.ver[data]), s.cls[data].name)
+                        pool.pending.setdefault(key, []).append(data)
+                    touched.add(m)
+                elif kind == "up":
+                    cloud, gen, forced_cold = data
+                    pool = s.pools[cloud]
+                    if gen != pool.generation:
+                        continue     # scheduled before a drain
+                    pool.scheduled_up -= 1
+                    warm = (not s.dep.autoscaler.cfg.cold_scale_up
+                            and not forced_cold)
+                    pool.replicas[s.next_rid] = _Replica(
+                        s.next_rid, warm=warm, last_active=t, created_s=t)
+                    if s.dep.autoscaler.tracks_idle:
+                        # a replica that joins after the queue drained
+                        # would otherwise never get an idle check
+                        heapq.heappush(events, (
+                            t + s.dep.autoscaler.cfg.idle_window_s,
+                            next(seq), "idle", m, (cloud, s.next_rid, t)))
+                    s.next_rid += 1
+                    touched.add(m)
+                elif kind == "free":
+                    cloud, rid, epoch = data
+                    pool = s.pools[cloud]
+                    r = pool.replicas.get(rid)
+                    if r is not None and r.epoch == epoch:
+                        # real completion (preempted batches bumped the
+                        # epoch): feed the burn monitor BEFORE the batch
+                        # is forgotten (spans/metrics fold off-loop)
+                        if r.inflight is not None:
+                            self._complete(s, pool, r.inflight, t)
+                        r.busy = False
+                        r.inflight = None
+                        r.last_active = t
+                        if pool.weight <= 0 and pool.queue_len() == 0:
+                            # drained-away pool: the last in-flight batch
+                            # just finished, release the replica now
+                            self._retire(s, pool, r, t, st)
+                        elif s.dep.autoscaler.tracks_idle:
                             heapq.heappush(events, (
                                 t + s.dep.autoscaler.cfg.idle_window_s,
-                                next(seq), "idle", m, (cloud, s.next_rid, t)))
-                        s.next_rid += 1
+                                next(seq), "idle", m, (cloud, rid, t)))
                         touched.add(m)
-                    elif kind == "free":
-                        cloud, rid, epoch = data
-                        pool = s.pools[cloud]
-                        r = pool.replicas.get(rid)
-                        if r is not None and r.epoch == epoch:
-                            r.busy = False
-                            r.inflight = None
-                            r.last_active = t
-                            if pool.weight <= 0 and pool.queue_len() == 0:
-                                # drained-away pool: the last in-flight batch
-                                # just finished, release the replica now
-                                self._retire(s, pool, r, t, st)
-                            elif s.dep.autoscaler.tracks_idle:
-                                heapq.heappush(events, (
-                                    t + s.dep.autoscaler.cfg.idle_window_s,
-                                    next(seq), "idle", m, (cloud, rid, t)))
-                            touched.add(m)
-                    else:                # "idle"
-                        idle_checks.append((m, data))
-                # sorted: set order depends on PYTHONHASHSEED, and which
-                # model dispatches first decides shared-capacity races --
-                # invariant 4 promises cross-process determinism
-                for m in sorted(touched):
+                else:                # "idle"
+                    idle_checks.append((m, data))
+            # sorted: set order depends on PYTHONHASHSEED, and which
+            # model dispatches first decides shared-capacity races --
+            # invariant 4 promises cross-process determinism
+            for m in sorted(touched):
+                self._dispatch(st[m], t, events, seq)
+                self._autoscale(st[m], t, events, seq, st, down)
+            if probe_due:
+                for m in sorted(self._probe(st, t, events, seq, down)):
                     self._dispatch(st[m], t, events, seq)
                     self._autoscale(st[m], t, events, seq, st, down)
-                if probe_due:
-                    for m in sorted(self._probe(st, t, events, seq, down)):
-                        self._dispatch(st[m], t, events, seq)
-                        self._autoscale(st[m], t, events, seq, st, down)
-                    if events or self._work_left(st):
-                        heapq.heappush(
-                            events, (t + self.replan.check_every_s,
-                                     next(seq), "probe", "", None))
-                for m, payload in idle_checks:
-                    self._maybe_retire(st[m], t, payload, st)
+                if self._work_left(st) or not _only_timers(events):
+                    heapq.heappush(
+                        events, (t + self.replan.check_every_s,
+                                 next(seq), "probe", "", None))
+            if scrape_due:
+                self._scrape(st, t)
+                if self._work_left(st) or not _only_timers(events):
+                    heapq.heappush(events, (t + self.scrape_every_s,
+                                            next(seq), "scrape", "", None))
+            for m, payload in idle_checks:
+                self._maybe_retire(st[m], t, payload, st)
+        _wall_s = time.perf_counter() - _wall0
 
         results, cold, costs, makespan = {}, {}, {}, 0.0
         totals: dict[str, float] = {}
@@ -911,6 +1019,22 @@ class Gateway:
                              for i in range(len(s.arr)) if not s.shed[i]),
                             default=0.0)
             makespan = max(makespan, totals[m])
+        self.log.record("gateway:run", makespan, models=sorted(by_model),
+                        n=int(sum(len(x.arr) for x in st.values())),
+                        wall_s=_wall_s)
+        if self.tracer is not None:
+            # collector flush: build the request span forest in bulk from
+            # the per-batch records -- off the event loop, like an async
+            # span processor draining its queue.  wall_s meta reports the
+            # flush cost next to gateway:run's hot-loop wall.
+            _mat0 = time.perf_counter()
+            self._materialize_trace(st)
+            self.tracer.end(self._run_span, max(makespan, t_last),
+                            models=sorted(by_model))
+            self._run_span = None
+            self.log.record("trace:materialize", 0.0,
+                            spans=len(self.tracer.spans),
+                            wall_s=time.perf_counter() - _mat0)
         for m, s in st.items():
             # bill surviving replicas to the fleet's last completion, NOT
             # to t_end: a trailing recover window or probe event on an
@@ -924,7 +1048,142 @@ class Gateway:
             if m in totals:
                 results[m] = self._result(s, totals[m])
                 cold[m] = s.cold_starts
+        if self.metrics is not None:
+            # closing scrape AFTER billing so the cost gauges are final
+            self._scrape(st, max(makespan, t_last), live_accrual=False)
         return GatewayResult(results, cold, makespan, costs)
+
+    def _complete(self, s: _ModelState, pool: _Pool, fl: dict,
+                  t: float) -> None:
+        """A batch really finished (its "free" matched the epoch): queue it
+        for the next metric fold and feed the burn monitor with the
+        per-pool deadline verdict.  The monitor is a CONTROLLER (it arms
+        probes and pressures the autoscaler) so it must see completions
+        live; metric series and spans are pure observers and fold off the
+        hot path -- the whole per-batch cost here is one tuple append."""
+        pend, burn = s.fold_pending, self.burn
+        if pend is None and burn is None:
+            return
+        thresh = fl["slo"].deadline_mult * self._pool_base(s, pool)
+        if pend is not None:
+            pend.append((fl["idx"], fl["cls"], thresh))
+        if burn is not None:
+            m = s.dep.name
+            cname = fl["cls"]
+            for i in fl["idx"]:
+                burn.observe(t, m, cname, float(s.lat[i]) <= thresh)
+
+    def _fold_metrics(self, st: dict, t: float) -> None:
+        """Drain the really-completed batches queued by _complete into the
+        request counters and latency sketches, chunked per class so the
+        sketch updates are vectorized -- called at each scrape, never from
+        the dispatch loop.  Completed batches are FINAL (a preemption
+        invalidates its batch strictly before the completion would fire),
+        so folds are incremental: total fold work is O(n) per run, and the
+        closing fold reconciles exactly with ServeResult."""
+        for s in st.values():
+            pend = s.fold_pending
+            if pend is None:
+                continue
+            if pend:
+                byc: dict = {}
+                for idx, cname, thresh in pend:
+                    byc.setdefault(cname, []).append((idx, thresh))
+                pend.clear()
+                for cname, batches in byc.items():
+                    served, missed, hist, _ = s.fold_inst[cname]
+                    flat = [i for idx, _ in batches for i in idx]
+                    vals = s.lat[flat]
+                    thr = np.repeat([th for _, th in batches],
+                                    [len(idx) for idx, _ in batches])
+                    served.value += float(len(flat))
+                    missed.value += float((vals > thr).sum())
+                    hist.sketch.observe_many(vals)
+            for cname, n_shed in s.class_shed.items():
+                s.fold_inst[cname][3].value = float(n_shed)
+
+    def _materialize_trace(self, st: dict) -> None:
+        """Build each request's span tree (root > queue/serve children)
+        from the batch records and shed marks the loop collected -- same
+        vocabulary and attrs as if the spans had been opened live, at a
+        fraction of the hot-path cost.  Creation order (models in deploy
+        order, requests by index, children chronologically) is
+        deterministic, so the exported trace is byte-stable per seed."""
+        tracer, run = self.tracer, self._run_span
+        for m, s in st.items():
+            n = len(s.arr)
+            if not n:
+                continue
+            by_req: list = [[] for _ in range(n)]
+            for rec in s.batch_recs:
+                for i in rec["idx"]:
+                    by_req[i].append(rec)
+            links = (s.dep.trace_link,) if s.dep.trace_link is not None \
+                else ()
+            for i in range(n):
+                root = tracer.start("gateway.request", float(s.arr[i]),
+                                    parent=run, links=links, model=m,
+                                    idx=i, cls=s.cls[i].name)
+                cursor, requeued = root.t0, False
+                for rec in by_req[i]:
+                    q = tracer.start("gateway.queue", cursor, parent=root,
+                                     cloud=rec["cloud"])
+                    if requeued:
+                        q.attrs["requeued"] = True
+                    q.t1 = rec["start_s"]
+                    sp = tracer.start(
+                        "gateway.serve", rec["start_s"], parent=root,
+                        cloud=rec["cloud"], rid=rec["rid"],
+                        batch=len(rec["idx"]), rtt_lb_s=rec["rtt_lb_s"],
+                        cold_s=rec["cold_s"], service_s=rec["service_s"])
+                    sp.t1 = rec["end_s"]
+                    if rec["preempted"]:
+                        sp.attrs["preempted"] = True
+                        cursor, requeued = rec["end_s"], True
+                if s.shed[i]:
+                    t_shed, where, cloud = s.shed_at[i]
+                    if by_req[i] or where != "enqueue":
+                        # shed out of a queue (dispatch-time prune); an
+                        # enqueue-time shed never queued at all
+                        q = tracer.start("gateway.queue", cursor,
+                                         parent=root, cloud=cloud)
+                        if requeued:
+                            q.attrs["requeued"] = True
+                        q.t1 = t_shed
+                    root.t1 = t_shed
+                    root.attrs["outcome"] = "shed"
+                    root.attrs["at"] = where
+                else:
+                    root.t1 = by_req[i][-1]["end_s"]
+                    root.attrs["outcome"] = "served"
+                    root.attrs["latency_s"] = float(s.lat[i])
+
+    def _scrape(self, st: dict, t: float, *,
+                live_accrual: bool = True) -> None:
+        """Freeze queue-depth / replica / accrued-cost gauges and take a
+        MetricsRegistry snapshot at simulated time ``t`` (the "scrape"
+        event; scheduled every ``scrape_every_s`` like replan probes).
+        ``live_accrual=False`` for the closing scrape: end-of-run billing
+        already folded surviving replicas into replica_seconds."""
+        metrics = self.metrics
+        self._fold_metrics(st, t)        # counters/sketches catch up first
+        for m, s in st.items():
+            for c, pool in s.pools.items():
+                g = s.gauge_inst.get(c)  # lazy: migration can open pools
+                if g is None:
+                    g = s.gauge_inst[c] = (
+                        metrics.gauge("gateway_queue_depth",
+                                      model=m, cloud=c),
+                        metrics.gauge("gateway_replicas", model=m, cloud=c),
+                        metrics.gauge("gateway_cost_usd", model=m, cloud=c))
+                g[0].set(pool.queue_len())
+                g[1].set(pool.size())
+                accrued = pool.replica_seconds
+                if live_accrual:
+                    accrued += sum(max(t - r.created_s, 0.0)
+                                   for r in pool.replicas.values())
+                g[2].set(accrued * pool.profile.cost_per_s)
+        metrics.scrape(t, self.log)
 
     def _result(self, s: _ModelState, total: float) -> ServeResult:
         dep = s.dep
@@ -1079,6 +1338,10 @@ class Gateway:
         self.log.record("gateway:shed", 0.0, model=s.dep.name,
                         cloud=pool.profile.name, cls=c.name, idx=int(i),
                         t_sim=round(t, 6), at=where)
+        if self.tracer is not None:      # span materialized post-run
+            s.shed_at[i] = (t, where, pool.profile.name)
+        if self.burn is not None:        # a shed is a budget breach
+            self.burn.observe(t, s.dep.name, c.name, good=False)
 
     def _prune_hopeless(self, s: _ModelState, pool: _Pool, t: float) -> None:
         """Dispatch-time re-check: shed queued requests whose BEST-CASE
@@ -1184,12 +1447,20 @@ class Gateway:
         r.last_active = done
         r.epoch += 1
         rec = None
-        if self.record_batches:
+        if self.record_batches or s.batch_recs is not None:
+            # one dict per BATCH is the whole per-dispatch telemetry cost;
+            # the span materializer reads rtt_lb/cold/service back out
             rec = {"model": dep.name, "rid": r.rid,
                    "cloud": pool.profile.name,
                    "cls": cname, "version": v, "idx": tuple(take),
-                   "start_s": t, "end_s": done, "preempted": False}
-            self.batch_log.append(rec)
+                   "start_s": t, "end_s": done, "preempted": False,
+                   "rtt_lb_s": pool.profile.network_rtt_s
+                   + pool.profile.lb_overhead_s,
+                   "cold_s": cold, "service_s": svc}
+            if self.record_batches:
+                self.batch_log.append(rec)
+            if s.batch_recs is not None:
+                s.batch_recs.append(rec)
         r.inflight = {"idx": take, "v": v, "cls": cname,
                       "slo": s.slo_by_name[cname], "backend": backend.name,
                       "service_s": svc, "done": done, "record": rec,
@@ -1225,6 +1496,9 @@ class Gateway:
         s.busy_s -= fl["service_s"]
         s.per_version[fl["backend"]] -= len(take)
         if fl["record"] is not None:
+            # the serve attempt is abandoned: the materializer turns this
+            # into a preempted serve span followed by a requeued queue span
+            # (the analyzer charges preempted time separately from service)
             fl["record"]["end_s"] = t
             fl["record"]["preempted"] = True
         r.busy = False
@@ -1439,9 +1713,18 @@ class Gateway:
         queue, but it is still overloaded."""
         cfg = self.replan
         q = s.dep.autoscaler.effective_queue(pool.queue_len(),
-                                             pool.shed_pressure)
+                                             pool.shed_pressure,
+                                             self._alert_pressure(s))
         return q > (cfg.overload_factor * s.dep.autoscaler.cfg.target_queue
                     * max(pool.size(), 1))
+
+    def _alert_pressure(self, s: _ModelState) -> int:
+        """Extra queue depth an active SLO burn-rate alert contributes to
+        every scaling / overload read for this model (telemetry/slo.py)."""
+        if self.burn is None:
+            return 0
+        return self.burn.pressure(s.dep.name,
+                                  s.dep.autoscaler.cfg.target_queue)
 
     def _probe(self, st, t, events, seq, down) -> set:
         """One auto-replan check over every model (ReplanConfig)."""
@@ -1470,6 +1753,10 @@ class Gateway:
             offered = s.win_n + s.win_shed
             shed_hot = (offered >= cfg.min_window_n
                         and s.win_shed / offered > cfg.max_shed_rate)
+            # an active burn-rate alert arms the same shift: the monitor's
+            # sliding windows typically trip BEFORE the probe-window rates
+            # accumulate (it sees every completion, not probe epochs)
+            burning = self.burn is not None and self.burn.is_burning(m)
             was_shedding = s.win_shed > 0
             # the window is consumed by THIS probe whatever it decides --
             # an aborted shift (no destination) must not leak completions
@@ -1479,13 +1766,14 @@ class Gateway:
             s.win_epoch += 1
             for _, p in live:
                 p.shed_pressure = 0
-            if blocked or miss or shed_hot:
+            if blocked or miss or shed_hot or burning:
                 s.streak["hot"] += 1
                 s.streak["cold"] = 0
                 # remember what ARMED the trigger: the firing probe's own
                 # flags may differ from what built the streak
                 s.streak_why = ("overload" if blocked
-                                else "miss_rate" if miss else "shed_rate")
+                                else "miss_rate" if miss
+                                else "shed_rate" if shed_hot else "slo_burn")
             else:
                 s.streak["hot"] = 0
                 idle_split = (cfg.consolidate and len(live) > 1
@@ -1597,12 +1885,17 @@ class Gateway:
                    down) -> None:
         cfg = s.dep.autoscaler.cfg
         budget = max(cfg.max_replicas, cfg.min_replicas)
+        alert_q = self._alert_pressure(s)
         for pool in s.pools.values():
             # shed-pressure counts as queue depth: demand that admission
             # control dropped is still demand, and must drive scale-up
-            # rather than be masked by the now-short queue
-            q = s.dep.autoscaler.effective_queue(pool.queue_len(),
-                                                 pool.shed_pressure)
+            # rather than be masked by the now-short queue; an active SLO
+            # burn alert adds model-wide pressure the same way -- but only
+            # to pools actually carrying traffic (a zero-weight standby
+            # must not scale from zero on an alert it cannot serve)
+            q = s.dep.autoscaler.effective_queue(
+                pool.queue_len(), pool.shed_pressure,
+                alert_q if pool.weight > 0 else 0)
             if q > 0 and pool.size() == 0:   # scale from zero: spin up one
                 if s.total_pool() >= budget:
                     # queued work is pinned to THIS pool (routing moves only

@@ -1,10 +1,22 @@
 """Structured event log + stage timing (the Istio-metrics analog).
 
 Every pipeline run / serving session records stage events; benchmarks read
-these to build the paper's Tables 4/5 (per-stage pipeline timing).
+these to build the paper's Tables 4/5 (per-stage pipeline timing).  The
+log is one leg of the observability plane (DESIGN.md S5): events are the
+flat audit stream, ``telemetry/trace.py`` holds the span tree,
+``telemetry/metrics.py`` the counter/histogram series derived from both.
+
+Determinism contract: ``record`` stamps a monotonic per-log ``seq`` --
+never the wall clock -- and simulated timestamps ride in ``t_sim`` meta,
+so ``dump()`` is byte-stable under a fixed seed.  Wall-clock measurements
+(the hardware-gate side of DESIGN.md S1) are confined to two places:
+``stage(...)`` events (marked ``wall=True``) and explicit ``wall_s`` meta
+keys.  ``dump()`` strips both by default; ``dump(include_wall=True)``
+keeps them for profiling.
 
 Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
-  gateway:run                the whole simulation (a stage)
+  gateway:run                the whole simulation (duration = simulated
+                             makespan; wall_s meta carries the real wall)
   gateway:scale_up/down      replica launched / retired (cloud-stamped)
   gateway:scale_to_zero      every pool of a deployment emptied
   gateway:cold_start         first batch on a weightless replica
@@ -27,13 +39,33 @@ Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
   gateway:migrate            a re-planning decision: an explicit
                              MigrationSpec step (reason=plan) or an
                              auto-replan shift (reason=overload /
-                             miss_rate / shed_rate / cost, with
-                             src/dst/delta)
+                             miss_rate / shed_rate / slo_burn / cost,
+                             with src/dst/delta)
   gateway:failover/recover   outage edge as seen by one deployment -- the
                              degenerate split (dead cloud's weight -> 0,
                              restored on recovery)
   gateway:observed           measured arrival rate + realized service time
                              per model (placement.replan input)
+  gateway:alert              SLO burn-rate alert edge (telemetry/slo.py):
+                             a (model, class) pair is consuming error
+                             budget faster than ``threshold`` x the
+                             sustainable rate over BOTH the short and long
+                             windows (state=firing), or stopped
+                             (state=resolved); carries burn_short /
+                             burn_long / objective
+
+Observability vocabulary (telemetry/, DESIGN.md S5):
+  metrics:scrape             a simulated-time MetricsRegistry snapshot was
+                             taken (t_sim, number of live series); the
+                             snapshot itself lives in
+                             MetricsRegistry.scrapes
+  trace:materialize          the gateway's deferred collector flushed: the
+                             request span forest was built in bulk AFTER
+                             the event loop from the per-batch records
+                             (spans; wall_s meta carries the flush cost,
+                             reported next to gateway:run's hot-loop wall
+                             and excluded from it)
+  trace:export               a Tracer span tree was exported (path, spans)
 
 Pipeline-orchestrator vocabulary (pipelines/scheduler.py + runs.py,
 DESIGN.md S4; t_sim stamps are simulated seconds):
@@ -67,31 +99,46 @@ from __future__ import annotations
 import contextlib
 import json
 import time
-from typing import Any, Optional
+from typing import Optional
+
+# meta keys that carry wall-clock measurements; dump() gates them so the
+# default export is byte-stable under a fixed seed
+_WALL_KEYS = ("wall_s",)
 
 
 class EventLog:
     def __init__(self):
         self.events: list[dict] = []
+        self._by_name: dict[str, list] = {}  # name -> events (same dicts)
+        self._seq = 0                        # monotonic per-log sequence
 
     def record(self, name: str, duration_s: float, **meta):
-        self.events.append({"name": name, "duration_s": duration_s,
-                            "t": time.time(), **meta})
+        e = {"name": name, "duration_s": duration_s, "seq": self._seq,
+             **meta}
+        self._seq += 1
+        self.events.append(e)
+        self._by_name.setdefault(name, []).append(e)
 
     @contextlib.contextmanager
     def stage(self, name: str, **meta):
+        """Wall-clock a code block (the hardware-measurement primitive,
+        DESIGN.md S1: serial pipeline stages / train jobs are timed on
+        this host).  The event is marked ``wall=True`` so ``dump()`` can
+        gate its non-deterministic duration."""
         t0 = time.perf_counter()
         try:
             yield
         finally:
-            self.record(name, time.perf_counter() - t0, **meta)
+            self.record(name, time.perf_counter() - t0, wall=True, **meta)
 
     def named(self, name: str) -> list:
-        """All events with this name, in record order."""
-        return [e for e in self.events if e["name"] == name]
+        """All events with this name, in record order (indexed: O(1) per
+        call, not a scan -- the invariant suites call this O(events)
+        times)."""
+        return list(self._by_name.get(name, ()))
 
     def count(self, name: str) -> int:
-        return len(self.named(name))
+        return len(self._by_name.get(name, ()))
 
     def totals(self) -> dict:
         out: dict = {}
@@ -99,12 +146,29 @@ class EventLog:
             out[e["name"]] = out.get(e["name"], 0.0) + e["duration_s"]
         return out
 
-    def dump(self, path: Optional[str] = None) -> str:
-        s = json.dumps(self.events, indent=1, default=str)
+    def dump(self, path: Optional[str] = None, *,
+             include_wall: bool = False) -> str:
+        """JSON export.  By default every wall-clock field is stripped
+        (``wall_s`` meta everywhere; ``duration_s`` on ``wall=True`` stage
+        events), so two seeded simulated runs dump byte-identical text.
+        ``include_wall=True`` keeps the measurements."""
+        events = self.events
+        if not include_wall:
+            events = []
+            for e in self.events:
+                drop = _WALL_KEYS + (("duration_s",) if e.get("wall")
+                                     else ())
+                events.append({k: v for k, v in e.items() if k not in drop}
+                              if any(k in e for k in drop) else e)
+        s = json.dumps(events, indent=1, default=str)
         if path:
             with open(path, "w") as f:
                 f.write(s)
         return s
 
 
+# Legacy shared sink.  NO repro code records into it: gateway and
+# orchestrator each own a run-scoped EventLog (pass log=... to share one).
+# tests/conftest.py installs an autouse fixture that fails any test
+# leaking events here.
 GLOBAL_LOG = EventLog()

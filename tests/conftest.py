@@ -21,6 +21,21 @@ except ImportError:                      # dev dep; suites importorskip/skip
     pass
 
 
+@pytest.fixture(autouse=True)
+def _no_global_log_leaks():
+    """GLOBAL_LOG is a retired legacy sink (telemetry/events.py): every
+    gateway / orchestrator owns a run-scoped EventLog.  Fail any test that
+    records into the shared singleton -- a leak here means some code path
+    silently fell back to it."""
+    from repro.telemetry.events import GLOBAL_LOG
+    before = len(GLOBAL_LOG.events)
+    yield
+    leaked = GLOBAL_LOG.events[before:]
+    assert not leaked, (
+        f"{len(leaked)} event(s) leaked into the legacy GLOBAL_LOG "
+        f"(first: {leaked[0]['name']!r}); pass log=EventLog() instead")
+
+
 def make_batch(cfg, B, S, key=None, labels=True):
     """Batch dict matching models.lm.forward's contract for any family."""
     key = key if key is not None else jax.random.PRNGKey(1)

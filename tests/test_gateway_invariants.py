@@ -1,9 +1,11 @@
 """Property-based invariants over random gateway fleets, traffic mixes,
 failure injections, active-active splits, live migrations (ISSUE 2
 archetype suite, extended to active-active by ISSUE 3) and queue-aware
-routing + per-class admission control (ISSUE 4).
+routing + per-class admission control (ISSUE 4) -- with the observability
+plane (tracer + metrics registry + burn-rate monitor, ISSUE 6) attached to
+every scenario and reconciled against the simulation.
 
-Six invariants, checked over randomly drawn scenarios:
+Nine invariants, checked over randomly drawn scenarios:
 
   1. every request completes EXACTLY once OR is shed exactly once (with a
      matching gateway:shed event), even when preemption, cloud failover
@@ -21,7 +23,21 @@ Six invariants, checked over randomly drawn scenarios:
      cloud of a deployment is down);
   6. shed bookkeeping is consistent: per-class shed counts match the
      event log, shed requests are excluded from latency percentiles, and
-     with admission off nothing is ever shed.
+     with admission off nothing is ever shed;
+  7. the span tree is well-formed (validate_trace) and complete: one
+     gateway.run root, one gateway.request span per offered request
+     ending served xor shed, and a served request's latency decomposes
+     exactly into queue + preempted + rtt/lb + cold + service child time;
+  8. the metric plane reconciles exactly: served + shed counters equal
+     offered per model, per-class histogram counts equal the served
+     samples, and sketch p50/p99 sit within the 1/sub relative-error
+     bound of the exact rank statistic;
+  9. burn-rate alert edges strictly alternate firing/resolved per
+     (model, class), each firing bumps gateway_slo_alerts_total, and
+     scrape timestamps are monotone with a final post-run scrape.
+
+Determinism (invariant 4) now also covers the plane: byte-stable
+EventLog.dump(), bit-identical trace JSON, identical Prometheus text.
 
 The scenario space is described once (``scenario``) and driven two ways:
 via hypothesis when it is installed (requirements-dev.txt; CI pins
@@ -38,7 +54,11 @@ from repro.clouds.profiles import get_profile
 from repro.serving.gateway import (AdmissionConfig, AutoscalerConfig,
                                    FailureSpec, Gateway, MigrationSpec,
                                    ReplanConfig, RoutingConfig, TrafficSpec)
+from repro.telemetry.analyze import request_breakdown, validate_trace
 from repro.telemetry.events import EventLog
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.slo import BurnRateConfig
+from repro.telemetry.trace import Tracer
 
 from conftest import AnalyticBackend
 
@@ -93,6 +113,8 @@ def scenario(pick_int, pick_choice, pick_float):
             "replan": pick_choice((True, False)),
             "routing": pick_choice(("queue_aware", "weights")),
             "admission": pick_choice((None, 1.0, 1.5)),   # shed margin
+            "slo_burn": pick_choice((None, 2.0, 6.0)),    # burn threshold
+            "scrape": pick_choice((None, 0.25)),          # scrape period
             "capacity": capacity, "seed": pick_int(0, 2 ** 16)}
 
 
@@ -102,7 +124,13 @@ def build(p):
                          if p["replan"] else None),
                  routing=RoutingConfig(policy=p["routing"]),
                  admission=(AdmissionConfig(margin=p["admission"])
-                            if p["admission"] else None))
+                            if p["admission"] else None),
+                 # the full observability plane rides every scenario: the
+                 # invariants below reconcile it against the simulation
+                 tracer=Tracer(), metrics=MetricsRegistry(),
+                 slo_burn=(BurnRateConfig(threshold=p["slo_burn"])
+                           if p["slo_burn"] else None),
+                 scrape_every_s=p["scrape"])
     for m in p["models"]:
         other = CLOUDS[1 - CLOUDS.index(m["cloud"])]
         backend = AnalyticBackend(m["name"], m["base_ms"] / 1e3,
@@ -216,6 +244,75 @@ def run_and_check(p):
     assert set(gw.final_weights) == set(out.costs)
     assert all(c >= 0.0 for c in out.costs.values())
     assert abs(out.total_cost_usd - sum(out.costs.values())) < 1e-12
+
+    # 7. (ISSUE 6) the trace is well-formed and complete: unique ids,
+    #    acyclic parent edges, every child interval nested in its parent,
+    #    no open spans; ONE gateway.run root; exactly one gateway.request
+    #    span per offered request, each ending served xor shed; a served
+    #    request's latency decomposes exactly into its child spans
+    tr, reg = gw.tracer, gw.metrics
+    violations = validate_trace(tr)
+    assert violations == [], violations
+    assert len(tr.named("gateway.run")) == 1
+    req_spans: dict = {}
+    for sp in tr.named("gateway.request"):
+        req_spans.setdefault(sp.attrs["model"], []).append(sp)
+    rows = {(r["model"], r["idx"]): r for r in request_breakdown(tr)}
+    for m, n in want.items():
+        res = out.per_model[m]
+        spans = req_spans.get(m, [])
+        assert len(spans) == n
+        outcomes = [sp.attrs["outcome"] for sp in spans]
+        assert all(o in ("served", "shed") for o in outcomes)
+        assert sum(o == "shed" for o in outcomes) == res.shed_total
+        for sp in spans:
+            if sp.attrs["outcome"] != "served":
+                continue
+            row = rows[(m, sp.attrs["idx"])]
+            parts = (row["queue_s"] + row["preempted_s"] + row["rtt_lb_s"]
+                     + row["cold_s"] + row["service_s"])
+            assert abs(parts - row["total_s"]) < 1e-6 + 1e-6 * row["total_s"], row
+
+        # 8. the metric plane reconciles EXACTLY with the event log and the
+        #    result: served + shed counters == offered, per-class histogram
+        #    counts == served samples, and every sketch quantile is within
+        #    its 1/sub relative-error bound of the exact rank statistic
+        n_shed = res.shed_total
+        assert reg.total("gateway_requests_total", model=m,
+                         outcome="served") == n - n_shed
+        assert reg.total("gateway_requests_total", model=m,
+                         outcome="shed") == n_shed
+        for cname, ls in res.class_latencies.items():
+            snap = reg.value("gateway_request_latency_seconds",
+                             model=m, cls=cname)
+            if not ls:
+                assert snap is None or snap["n"] == 0
+                continue
+            assert snap["n"] == len(ls)
+            assert abs(snap["sum"] - sum(ls)) <= 1e-9 * max(sum(ls), 1.0)
+            xs = sorted(ls)
+            for q, got in ((0.5, snap["p50"]), (0.99, snap["p99"])):
+                exact = xs[max(math.ceil(q * len(xs)), 1) - 1]
+                assert abs(got - exact) <= exact / reg.sub + 1e-12, \
+                    (m, cname, q, got, exact)
+
+    # 9. burn-rate alerts are edge-consistent: firing/resolved strictly
+    #    alternate per (model, cls), every firing edge bumped the alert
+    #    counter, and without a monitor there are no alert events
+    edges: dict = {}
+    for e in gw.log.named("gateway:alert"):
+        edges.setdefault((e["model"], e["cls"]), []).append(e["state"])
+    if p["slo_burn"] is None:
+        assert edges == {}
+    for (m, cname), states in edges.items():
+        assert all(s == ("firing" if i % 2 == 0 else "resolved")
+                   for i, s in enumerate(states)), states
+        assert reg.total("gateway_slo_alerts_total", model=m, cls=cname) \
+            == sum(s == "firing" for s in states)
+    if p["scrape"]:
+        ts = [s["t_sim"] for s in reg.scrapes]
+        assert ts == sorted(ts) and len(ts) >= 1
+        assert reg.scrapes[-1]["t_sim"] >= out.makespan_s - 1e-9
     return out
 
 
@@ -229,6 +326,12 @@ def run_twice_and_compare(p):
     assert gw1.final_weights == gw2.final_weights
     assert ([e["name"] for e in gw1.log.events]
             == [e["name"] for e in gw2.log.events])
+    # ISSUE 6: the whole observability plane is seed-deterministic too --
+    # byte-stable event dump (wall fields stripped), bit-identical span
+    # tree, identical Prometheus exposition
+    assert gw1.log.dump() == gw2.log.dump()
+    assert gw1.tracer.to_json() == gw2.tracer.to_json()
+    assert gw1.metrics.to_prometheus() == gw2.metrics.to_prometheus()
 
 
 # -- hypothesis driver (requirements-dev.txt) --------------------------------
