@@ -41,13 +41,12 @@ cache_hit / transfer / retry / fail / skip / deploy / recurring.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import time
 from typing import Any, Optional
 
 from ..clouds.profiles import PROFILES, CloudProfile, get_profile
 from ..core.pipeline import PipelineSpec, StepRef, step_cache_key, toposort
+from ..sim.engine import EventHeap
 from ..telemetry.events import EventLog
 from .artifacts import ArtifactCache, best_transfer, payload_bytes
 from .runs import RetryPolicy, RunRecord, StepRecord
@@ -252,16 +251,14 @@ class Orchestrator:
                 children[d].append(s.index)
         indeg = [len(s.deps) for s in spec.steps]
 
-        events: list = []
-        seq = itertools.count()
+        events = EventHeap()             # shared sim core (repro.sim.engine)
         ready: set = set()
         for s in spec.steps:
             if indeg[s.index] == 0:
-                heapq.heappush(events, (float(t0), next(seq), "ready",
-                                        s.index))
+                events.push(float(t0), "ready", s.index)
         for cloud, ws in windows.items():
             for _, end in ws:            # recovery edges re-arm scheduling
-                heapq.heappush(events, (end, next(seq), "recover", cloud))
+                events.push(end, "recover", cloud)
 
         t_last = float(t0)
         wall0 = time.perf_counter()
@@ -433,12 +430,12 @@ class Orchestrator:
                                 "pipeline.attempt", t, parent=s.span,
                                 cloud=home, cached=True, control_s=rtt,
                                 transfer_s=0.0, compute_s=0.0)
-                        heapq.heappush(events, (
-                            t + rtt, next(seq), "done",
+                        events.push(
+                            t + rtt, "done",
                             (i, {"cloud": home, "cached": True,
                                  "value": entry.value, "entry": entry,
                                  "dur": rtt, "cost": 0.0, "key": None,
-                                 "transfers": [], "span": hit_span})))
+                                 "transfers": [], "span": hit_span}))
                         continue
                 if self._inputs_blocked(st, step, windows, t):
                     continue             # inputs live only on dead clouds:
@@ -454,14 +451,15 @@ class Orchestrator:
                 transfers = self._plan_inputs(st, step, pool.profile.name,
                                               windows, t)
                 self._start_attempt(spec, st, i, pool, t, key, transfers,
-                                    windows, events, seq, perm_fail)
+                                    windows, events, perm_fail)
 
         while events:
-            t = events[0][0]
-            batch = []
-            while events and events[0][0] == t:
-                batch.append(heapq.heappop(events))
-            for _, _, kind, data in batch:
+            # collect-then-apply batching: a same-t push during the batch
+            # (e.g. a zero-RTT cache hit) lands in the NEXT batch, then
+            # schedule(t) runs again at the same timestamp -- the
+            # orchestrator's historical semantics, kept by pop_batch()
+            t, batch = events.pop_batch()
+            for kind, data in batch:
                 if kind == "ready":
                     if st[data].status == "pending":
                         st[data].status = "ready"
@@ -509,7 +507,7 @@ class Orchestrator:
                                         t_sim=round(t, 6),
                                         next_s=round(nxt, 6),
                                         reason="outage")
-                        heapq.heappush(events, (nxt, next(seq), "ready", i))
+                        events.push(nxt, "ready", i)
             schedule(t)
 
         bad = [names[i] for i, s in enumerate(st)
@@ -565,7 +563,7 @@ class Orchestrator:
         return (est, prof.cost_per_s, prof.name)
 
     def _start_attempt(self, spec, st, i: int, pool: _WorkerPool, t: float,
-                       key, transfers, windows, events, seq,
+                       key, transfers, windows, events: EventHeap,
                        perm_fail) -> None:
         step = spec.steps[i]
         s = st[i]
@@ -648,14 +646,13 @@ class Orchestrator:
         if t_f is not None:
             s.pending = {"cloud": cloud, "start": t, "tr_usd": tr_usd,
                          "spans": tspans}
-            heapq.heappush(events, (t_f, next(seq), "abort", i))
+            events.push(t_f, "abort", i)
             return
         cost = dur * pool.profile.cost_per_s + tr_usd
-        heapq.heappush(events, (t_end, next(seq), "done",
-                                (i, {"cloud": cloud, "cached": False,
-                                     "dur": dur, "cost": cost, "key": key,
-                                     "transfers": transfers,
-                                     "span": att_span})))
+        events.push(t_end, "done",
+                    (i, {"cloud": cloud, "cached": False,
+                         "dur": dur, "cost": cost, "key": key,
+                         "transfers": transfers, "span": att_span}))
 
     def _plan_handoff(self, step, s: _StepState) -> bool:
         """Deploy planning: size a placement from the backend's measured

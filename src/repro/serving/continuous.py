@@ -14,6 +14,7 @@ own cache rows, never leaking across slots (cache rows are per-sequence).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -56,7 +57,9 @@ class ContinuousBatcher:
         self.eos_id = eos_id
         self.cache = lm.init_cache(cfg, max_slots, max_len)
         self.slots = [_Slot() for _ in range(max_slots)]
-        self.queue: list[Request] = []
+        # deque: admission pops the head every step -- a plain list's
+        # pop(0) is O(n) and went quadratic under backlog (ISSUE 7)
+        self.queue: collections.deque[Request] = collections.deque()
         self.requests: list[Request] = []   # submitted, not yet run()-returned
         self.step_count = 0
         self._next_rid = 0
@@ -94,7 +97,7 @@ class ContinuousBatcher:
     def _admit(self):
         for i, s in enumerate(self.slots):
             if s.req is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 req.admitted_step = self.step_count
                 s.req = req
                 s.pos = 0

@@ -79,8 +79,6 @@ auto-replan check.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import math
 import time
 from typing import Any, Callable, Optional
@@ -88,6 +86,7 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from ...clouds.profiles import CloudProfile, get_profile
+from ...sim.engine import EventHeap, IndexQueue, Ledger
 from ...telemetry.events import EventLog
 from ...telemetry.metrics import MetricsRegistry
 from ...telemetry.slo import BurnRateConfig, BurnRateMonitor
@@ -281,15 +280,19 @@ class ServeResult:
     cost_usd: float = 0.0
     cost_by_cloud: dict = dataclasses.field(default_factory=dict)
 
+    # percentiles are None -- not 0.0 -- when NO request was served (empty
+    # class / shed-everything pools): 0.0 read as "perfect latency" and was
+    # indistinguishable from an actually-instant pool.  _class_stats and
+    # the bench schema carry the same convention.
     @property
-    def p50(self):
+    def p50(self) -> Optional[float]:
         return float(np.percentile(self.latencies_s, 50)) \
-            if self.latencies_s else 0.0
+            if self.latencies_s else None
 
     @property
-    def p99(self):
+    def p99(self) -> Optional[float]:
         return float(np.percentile(self.latencies_s, 99)) \
-            if self.latencies_s else 0.0
+            if self.latencies_s else None
 
     @property
     def shed_total(self) -> int:
@@ -311,9 +314,11 @@ class ServeResult:
                 for c in names}
 
     def summary(self) -> dict:
+        p50, p99 = self.p50, self.p99
         return {"strategy": self.strategy, "n": self.n_requests,
                 "total_s": round(self.total_time_s, 4),
-                "p50_s": round(self.p50, 4), "p99_s": round(self.p99, 4),
+                "p50_s": round(p50, 4) if p50 is not None else None,
+                "p99_s": round(p99, 4) if p99 is not None else None,
                 "replicas_max": max([r for _, r in self.replica_trace], default=1),
                 **({"shed": self.shed_total,
                     "shed_rate": round(self.shed_rate, 4)}
@@ -428,12 +433,26 @@ def _pow2(b: int) -> int:
 # completes.  Pending "idle" checks deliberately keep the timers alive:
 # they are one-shot (never re-pushed), so the tail is bounded by the idle
 # window, and the probe must stay armed through it for post-traffic cost
-# consolidation (idle split folds onto the cheap cloud, stragglers retire)
+# consolidation (idle split folds onto the cheap cloud, stragglers retire).
+# The rule itself lives in the shared sim core (EventHeap.only_timers);
+# this is the gateway's timer vocabulary.
 _TIMER_KINDS = frozenset(("probe", "scrape"))
 
+_INF = float("inf")
 
-def _only_timers(events: list) -> bool:
-    return all(e[2] in _TIMER_KINDS for e in events)
+
+class _Step:
+    """Mutable per-timestep scratch shared by both engines: which models
+    saw state changes (dispatch/autoscale run once per touched model at
+    the end of the step), deferred idle checks, and due timer flags."""
+
+    __slots__ = ("touched", "idle_checks", "probe_due", "scrape_due")
+
+    def __init__(self):
+        self.touched: set = set()
+        self.idle_checks: list = []
+        self.probe_due = False
+        self.scrape_due = False
 
 
 def _apportion(total: int, weights: dict) -> dict:
@@ -544,7 +563,7 @@ class _Pool:
         self.nominal = float(weight)
         self.floor = 0
         self.replicas: dict[int, _Replica] = {}
-        self.pending: dict[tuple, list] = {}
+        self.pending: dict[tuple, IndexQueue] = {}   # FIFO request rows
         self.scheduled_up = 0
         self.generation = 0              # bumps on drain; stale "up" dropped
         self.replica_seconds = 0.0       # provisioned time (simulated $)
@@ -560,21 +579,23 @@ class _Pool:
 
 
 class _ModelState:
-    def __init__(self, dep: Deployment, arr: np.ndarray, ver: np.ndarray,
-                 cls: list, route_u: np.ndarray):
+    def __init__(self, dep: Deployment, ledger: Ledger, classes: list):
         self.dep = dep
-        self.arr = arr
-        self.ver = ver
-        self.cls = cls                   # SLOClass per request index
-        self.route_u = route_u           # uniform draw per request (routing)
-        self.lat = np.full(len(arr), -1.0)
-        self.slo_by_name: dict[str, SLOClass] = {}
-        for c in cls:
-            prev = self.slo_by_name.setdefault(c.name, c)
-            if prev != c:                # queues are keyed by name: two
-                raise ValueError(        # defs would silently share one
-                    f"conflicting SLOClass definitions named {c.name!r} "
-                    f"on {dep.name!r}: {prev} vs {c}")
+        self.ledger = ledger             # SoA request columns (sim core)
+        # column aliases: the scalar engine addresses single rows, the
+        # vectorized engine whole index ranges -- same memory either way
+        self.arr = ledger.arr
+        self.ver = ledger.ver
+        self.cls_code = ledger.cls_code  # int code into ``classes``
+        self.route_u = ledger.route_u    # uniform draw per request (routing)
+        self.lat = ledger.lat
+        self.shed = ledger.shed
+        self.classes: list[SLOClass] = classes      # code order
+        self.mult_by_code = np.array(
+            [c.deadline_mult for c in classes]) if classes else np.zeros(0)
+        self.slo_by_name: dict[str, SLOClass] = {c.name: c for c in classes}
+        self.cursor = 0                  # vectorized engine: next arrival row
+        self.combo_rows: Optional[dict] = None   # lazy: rows per ver x class
         self.pools: dict[str, _Pool] = {}
         for prof, w in dep.placements:
             self.pools[prof.name] = _Pool(prof, w)
@@ -585,9 +606,8 @@ class _ModelState:
         self.served = 0
         self.busy_s = 0.0                # realized backend service seconds
         self.deadline_base = 0.0         # warm single-request path, primary
-        # per-request shed state (admission control): shed exactly once,
+        # per-request shed state (ledger.shed column): shed exactly once,
         # excluded from latency percentiles, counted per class
-        self.shed = np.zeros(len(arr), bool)
         self.class_shed: dict[str, int] = {}
         self.svc1 = 0.0                  # service_time(1), per-pool bases
         self.svc_est = 0.0               # amortized per-request service est.
@@ -611,6 +631,10 @@ class _ModelState:
         # batches awaiting the next metric fold: (idx, cls, miss threshold)
         self.fold_inst: dict = {}        # cname -> cached instruments
         self.gauge_inst: dict = {}       # cloud -> cached scrape gauges
+
+    def slo(self, i: int) -> SLOClass:
+        """The SLO class of request row ``i`` (ledger code -> class)."""
+        return self.classes[self.cls_code[i]]
 
     def total_pool(self) -> int:
         return sum(p.size() for p in self.pools.values())
@@ -741,6 +765,7 @@ class Gateway:
         self.batch_log: list = []        # dicts, one per dispatched batch
         self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
         self.final_weights: dict = {}    # model -> {cloud: weight} post-run
+        self.run_stats: dict = {}        # last run's engine + throughput
         self._run_span = None            # open gateway.run span during run()
 
     def deploy(self, name: str, backend, profile: Optional[CloudProfile] = None,
@@ -795,7 +820,25 @@ class Gateway:
     # -- discrete-event loop ------------------------------------------------
     def run(self, traffic: list, seed: int = 0,
             failures: Optional[list] = None,
-            migrations: Optional[list] = None) -> GatewayResult:
+            migrations: Optional[list] = None, *,
+            engine: str = "vector") -> GatewayResult:
+        """Run the workload through the discrete-event simulation.
+
+        engine="vector" (default): the vectorized hot path -- arrivals
+        stay in the sorted ledger columns (never entering the event
+        heap), whole arrival spans bulk-enqueue between discrete control
+        events when a conservative attention predicate proves the span
+        side-effect free, and per-batch folds are numpy.  engine="scalar"
+        is the per-request reference loop.  The two are BIT-COMPATIBLE:
+        identical EventLog (kinds + order), ServeResult, per-class
+        percentiles and simulated dollars on any seed -- enforced by the
+        equivalence suite (tests/test_engine_equivalence.py) and the
+        bench oracle; the vector engine falls back to scalar-style
+        single-timestamp processing whenever the predicate cannot prove
+        a span inert, so feature coverage is identical by construction.
+        """
+        if engine not in ("scalar", "vector"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.batch_log = []              # audit trails cover ONE run
         self.usage_trace = []
         self.final_weights = {}
@@ -811,26 +854,39 @@ class Gateway:
                 raise KeyError(f"no deployment named {spec.model!r}")
             by_model.setdefault(spec.model, []).append(spec)
 
-        events: list = []                # (t, seq, kind, model, payload)
-        seq = itertools.count()
+        events = EventHeap(_TIMER_KINDS)
         down: dict[str, int] = {}        # cloud -> active failure windows
         st: dict[str, _ModelState] = {}
         for m, dep in self.deployments.items():
             specs = by_model.get(m, [])
-            times, classes = [], []
+            times, code_chunks = [], []
+            classes: list = []           # SLOClass per code, first-use order
             for spec in specs:
                 ts = spec.gen(rng)
                 times.append(ts)
-                classes.extend([resolve_slo(spec.slo)] * len(ts))
+                c = resolve_slo(spec.slo)
+                code = next((k for k, kc in enumerate(classes)
+                             if kc.name == c.name), None)
+                if code is None:
+                    classes.append(c)
+                    code = len(classes) - 1
+                elif classes[code] != c:  # queues are keyed by name: two
+                    raise ValueError(     # defs would silently share one
+                        f"conflicting SLOClass definitions named {c.name!r} "
+                        f"on {m!r}: {classes[code]} vs {c}")
+                code_chunks.append(np.full(len(ts), code, dtype=np.intp))
             arr = np.concatenate(times) if times else np.zeros(0)
+            codes = (np.concatenate(code_chunks) if code_chunks
+                     else np.zeros(0, dtype=np.intp))
             order = np.argsort(arr, kind="stable")
             arr = arr[order]
-            cls = [classes[i] for i in order]
+            codes = codes[order]
             ver = np.zeros(len(arr), int)
             if dep.canary is not None and dep.canary_fraction > 0:
                 ver = (rng.random(len(arr)) < dep.canary_fraction).astype(int)
             route_u = rng.random(len(arr))
-            s = st[m] = _ModelState(dep, arr, ver, cls, route_u)
+            s = st[m] = _ModelState(dep, Ledger(arr, codes, ver, route_u),
+                                    classes)
             if self.tracer is not None:
                 s.batch_recs = []
             if self.metrics is not None and len(arr):
@@ -863,8 +919,12 @@ class Gateway:
             s.svc_est = dep.backend.service_time(dep.max_batch) / dep.max_batch
             s.deadline_base = (dep.profile.network_rtt_s
                                + dep.profile.lb_overhead_s + s.svc1)
-            for i, t in enumerate(arr):
-                heapq.heappush(events, (float(t), next(seq), "arr", m, i))
+            if engine == "scalar":
+                # the vector engine keeps arrivals in the sorted ledger
+                # columns and consumes them by cursor -- they never touch
+                # the heap (the whole point of the SoA hot path)
+                for i, t in enumerate(arr):
+                    events.push(float(t), "arr", m, i)
 
         base: dict[str, int] = {}        # cloud -> baseline floors, over
         for s in st.values():            # EVERY deployment: an idle pool
@@ -877,133 +937,33 @@ class Gateway:
                     f"min_replicas on {cloud!r} total {n} > capacity {cap}")
 
         for f in failures or []:
-            heapq.heappush(events, (float(f.at_s), next(seq),
-                                    "fail", "", f.cloud))
-            heapq.heappush(events, (float(f.at_s + f.duration_s), next(seq),
-                                    "recover", "", f.cloud))
+            events.push(float(f.at_s), "fail", "", f.cloud)
+            events.push(float(f.at_s + f.duration_s), "recover", "", f.cloud)
         for mig in migrations or []:
-            heapq.heappush(events, (float(mig.at_s), next(seq),
-                                    "replan", "", mig))
+            events.push(float(mig.at_s), "replan", "", mig)
         if self.replan is not None:
-            heapq.heappush(events, (float(self.replan.check_every_s),
-                                    next(seq), "probe", "", None))
+            events.push(float(self.replan.check_every_s), "probe", "", None)
         if self.metrics is not None and self.scrape_every_s is not None:
-            heapq.heappush(events, (float(self.scrape_every_s),
-                                    next(seq), "scrape", "", None))
+            events.push(float(self.scrape_every_s), "scrape", "", None)
 
         # gateway:run is recorded AFTER the loop with the SIMULATED makespan
         # as its duration (wall_s meta carries the real wall), mirroring
         # pipeline:run -- so dump() stays byte-stable under a fixed seed
         _wall0 = time.perf_counter()
-        t_last = 0.0
-        while events:
-            t = events[0][0]
-            t_last = t
-            touched, idle_checks = set(), []
-            probe_due = scrape_due = False
-            # apply every state change at time t before dispatching so a
-            # burst admits as full batches (pre-gateway sim semantics);
-            # probes run after dispatch (leftover queues are real
-            # pressure); idle expiries run last so a coincident arrival
-            # wins the replica instead of forcing a retire + cold start
-            while events and events[0][0] == t:
-                _, _, kind, m, data = heapq.heappop(events)
-                if kind == "fail":
-                    down[data] = down.get(data, 0) + 1
-                    if down[data] == 1:
-                        touched |= self._outage_edge(
-                            st, t, down, events, seq, reason="fail",
-                            cloud=data)
-                    continue
-                if kind == "recover":
-                    down[data] -= 1
-                    if down[data] == 0:
-                        del down[data]
-                        touched |= self._outage_edge(
-                            st, t, down, events, seq, reason="recover",
-                            cloud=data)
-                    continue
-                if kind == "replan":
-                    touched |= self._apply_migration(
-                        st, t, data.plan, events, seq, down)
-                    continue
-                if kind == "probe":
-                    probe_due = True
-                    continue
-                if kind == "scrape":
-                    scrape_due = True
-                    continue
-                s = st[m]
-                if kind == "arr":
-                    pool = self._route(s, data)
-                    if self._admit(s, pool, data, t):
-                        key = (int(s.ver[data]), s.cls[data].name)
-                        pool.pending.setdefault(key, []).append(data)
-                    touched.add(m)
-                elif kind == "up":
-                    cloud, gen, forced_cold = data
-                    pool = s.pools[cloud]
-                    if gen != pool.generation:
-                        continue     # scheduled before a drain
-                    pool.scheduled_up -= 1
-                    warm = (not s.dep.autoscaler.cfg.cold_scale_up
-                            and not forced_cold)
-                    pool.replicas[s.next_rid] = _Replica(
-                        s.next_rid, warm=warm, last_active=t, created_s=t)
-                    if s.dep.autoscaler.tracks_idle:
-                        # a replica that joins after the queue drained
-                        # would otherwise never get an idle check
-                        heapq.heappush(events, (
-                            t + s.dep.autoscaler.cfg.idle_window_s,
-                            next(seq), "idle", m, (cloud, s.next_rid, t)))
-                    s.next_rid += 1
-                    touched.add(m)
-                elif kind == "free":
-                    cloud, rid, epoch = data
-                    pool = s.pools[cloud]
-                    r = pool.replicas.get(rid)
-                    if r is not None and r.epoch == epoch:
-                        # real completion (preempted batches bumped the
-                        # epoch): feed the burn monitor BEFORE the batch
-                        # is forgotten (spans/metrics fold off-loop)
-                        if r.inflight is not None:
-                            self._complete(s, pool, r.inflight, t)
-                        r.busy = False
-                        r.inflight = None
-                        r.last_active = t
-                        if pool.weight <= 0 and pool.queue_len() == 0:
-                            # drained-away pool: the last in-flight batch
-                            # just finished, release the replica now
-                            self._retire(s, pool, r, t, st)
-                        elif s.dep.autoscaler.tracks_idle:
-                            heapq.heappush(events, (
-                                t + s.dep.autoscaler.cfg.idle_window_s,
-                                next(seq), "idle", m, (cloud, rid, t)))
-                        touched.add(m)
-                else:                # "idle"
-                    idle_checks.append((m, data))
-            # sorted: set order depends on PYTHONHASHSEED, and which
-            # model dispatches first decides shared-capacity races --
-            # invariant 4 promises cross-process determinism
-            for m in sorted(touched):
-                self._dispatch(st[m], t, events, seq)
-                self._autoscale(st[m], t, events, seq, st, down)
-            if probe_due:
-                for m in sorted(self._probe(st, t, events, seq, down)):
-                    self._dispatch(st[m], t, events, seq)
-                    self._autoscale(st[m], t, events, seq, st, down)
-                if self._work_left(st) or not _only_timers(events):
-                    heapq.heappush(
-                        events, (t + self.replan.check_every_s,
-                                 next(seq), "probe", "", None))
-            if scrape_due:
-                self._scrape(st, t)
-                if self._work_left(st) or not _only_timers(events):
-                    heapq.heappush(events, (t + self.scrape_every_s,
-                                            next(seq), "scrape", "", None))
-            for m, payload in idle_checks:
-                self._maybe_retire(st[m], t, payload, st)
+        if engine == "vector":
+            t_last = self._run_vector(st, events, down)
+        else:
+            t_last = self._run_scalar(st, events, down)
         _wall_s = time.perf_counter() - _wall0
+        n_req = int(sum(len(x.arr) for x in st.values()))
+        # vector-mode arrivals never enter the heap but are simulator
+        # events all the same -- count them so events/sec is comparable
+        sim_events = events.n_popped + (n_req if engine == "vector" else 0)
+        self.run_stats = {
+            "engine": engine, "requests": n_req, "sim_events": sim_events,
+            "wall_s": _wall_s,
+            "events_per_s": sim_events / _wall_s if _wall_s > 0 else 0.0,
+            "requests_per_s": n_req / _wall_s if _wall_s > 0 else 0.0}
 
         results, cold, costs, makespan = {}, {}, {}, 0.0
         totals: dict[str, float] = {}
@@ -1015,13 +975,12 @@ class Gateway:
                 raise RuntimeError(
                     f"gateway stalled: {m} served {s.served} + shed "
                     f"{n_shed} of {len(s.arr)}")
-            totals[m] = max((float(s.arr[i] + s.lat[i])
-                             for i in range(len(s.arr)) if not s.shed[i]),
-                            default=0.0)
+            keep = ~s.shed
+            totals[m] = (float((s.arr[keep] + s.lat[keep]).max())
+                         if keep.any() else 0.0)
             makespan = max(makespan, totals[m])
         self.log.record("gateway:run", makespan, models=sorted(by_model),
-                        n=int(sum(len(x.arr) for x in st.values())),
-                        wall_s=_wall_s)
+                        n=n_req, wall_s=_wall_s)
         if self.tracer is not None:
             # collector flush: build the request span forest in bulk from
             # the per-batch records -- off the event loop, like an async
@@ -1052,6 +1011,305 @@ class Gateway:
             # closing scrape AFTER billing so the cost gauges are final
             self._scrape(st, max(makespan, t_last), live_accrual=False)
         return GatewayResult(results, cold, makespan, costs)
+
+    def _run_scalar(self, st: dict, events: EventHeap, down: dict) -> float:
+        """Per-request reference loop: every arrival is a heap event."""
+        t_last = 0.0
+        while events:
+            t = events.peek_t()
+            t_last = t
+            step = _Step()
+            # apply every state change at time t before dispatching so a
+            # burst admits as full batches (pre-gateway sim semantics);
+            # probes run after dispatch (leftover queues are real
+            # pressure); idle expiries run last so a coincident arrival
+            # wins the replica instead of forcing a retire + cold start
+            while events and events.peek_t() == t:
+                kind, m, data = events.pop()
+                self._apply_event(st, t, kind, m, data, events, down, step)
+            self._finish_timestep(st, t, events, down, step)
+        return t_last
+
+    def _run_vector(self, st: dict, events: EventHeap, down: dict) -> float:
+        """Vectorized loop: arrivals live in the sorted ledger columns and
+        are consumed by per-model cursors.  Between heap events, whole
+        arrival spans bulk-append to their (single) live pool when the
+        attention predicate proves every skipped timestep-end a no-op;
+        any timestep the predicate cannot clear runs through the exact
+        same _apply_event/_finish_timestep code as the scalar engine.
+
+        Ordering matches the scalar engine by construction: there,
+        arrivals are pushed first at init (models in deploy order, rows
+        ascending), so at any shared timestamp they pop before every
+        other event -- here they are processed first explicitly, in the
+        same model/row order, before the heap events at that time."""
+        models = [m for m, s in st.items() if len(s.arr)]
+        bulk_ok = self.admission is None   # per-row admit decisions (and
+        # their shed side effects) force the per-row path
+        t_last = 0.0
+        while True:
+            t_arr = _INF
+            for m in models:
+                s = st[m]
+                if s.cursor < len(s.arr):
+                    ta = float(s.arr[s.cursor])
+                    if ta < t_arr:
+                        t_arr = ta
+            t_ev = events.peek_t()
+            t = min(t_arr, t_ev)
+            if t == _INF:
+                break
+            if bulk_ok and self.burn is None and t_arr < t_ev:
+                # silent span: every arrival strictly before t_cut only
+                # appends to its queue -- dispatch, autoscale, logging all
+                # provably idle until then
+                t_cut = t_ev
+                for m in models:
+                    s = st[m]
+                    if s.cursor < len(s.arr):
+                        att = self._attention_time(s)
+                        if att < t_cut:
+                            t_cut = att
+                if t_cut > t_arr:
+                    for m in models:
+                        s = st[m]
+                        lo = s.cursor
+                        if lo >= len(s.arr) or float(s.arr[lo]) >= t_cut:
+                            continue
+                        hi = lo + int(np.searchsorted(s.arr[lo:], t_cut,
+                                                      side="left"))
+                        self._bulk_append(s, lo, hi, self._route(s, lo))
+                        s.cursor = hi
+                    continue
+            # one full timestep at t: arrivals first (scalar pop order),
+            # then the heap events due now, then the shared step tail
+            step = _Step()
+            for m in models:
+                s = st[m]
+                lo, n = s.cursor, len(s.arr)
+                if lo >= n or float(s.arr[lo]) != t:
+                    continue
+                hi = lo + int(np.searchsorted(s.arr[lo:], t, side="right"))
+                live = sum(1 for p in s.pools.values() if p.weight > 0)
+                if bulk_ok and live <= 1:
+                    # routing is pinned (single live pool, or everything
+                    # waits on the primary) and admission is off: the
+                    # whole same-t burst appends in one grouped extend
+                    self._bulk_append(s, lo, hi, self._route(s, lo))
+                else:
+                    for i in range(lo, hi):
+                        self._arrive(s, i, t)
+                s.cursor = hi
+                step.touched.add(m)
+            while events and events.peek_t() == t:
+                kind, m, data = events.pop()
+                self._apply_event(st, t, kind, m, data, events, down, step)
+            t_last = t
+            left = any(st[m].cursor < len(st[m].arr) for m in models)
+            self._finish_timestep(st, t, events, down, step,
+                                  arrivals_left=left)
+        return t_last
+
+    def _attention_time(self, s: _ModelState) -> float:
+        """Earliest pending-arrival time at which this model might do
+        anything beyond appending one request to one queue.  Conservative
+        by design: flagging a harmless timestep only costs the slow path,
+        while the span skip is valid exactly when every skipped
+        timestep-end (dispatch + autoscale) is a no-op -- caller already
+        guarantees admission and burn monitoring are off."""
+        arr = s.arr
+        now = float(arr[s.cursor])
+        live = [p for p in s.pools.values() if p.weight > 0]
+        if len(live) != 1:
+            # multi-pool: queue-aware routing shifts per request;
+            # zero-pool: autoscale logs scale_denied every timestep
+            return now
+        pool = live[0]
+        for p in s.pools.values():
+            if p is not pool and p.queue_len():
+                return now               # a foreign queue could dispatch
+        size = pool.size()
+        if size == 0:
+            return now                   # scale-from-zero fires immediately
+        if any(not r.busy for r in pool.replicas.values()):
+            return now                   # an idle replica would dispatch
+        if any(c.preempts for c in s.classes) and any(
+                r.busy for r in pool.replicas.values()):
+            return now                   # arrival could preempt a batch
+        cfg = s.dep.autoscaler.cfg
+        budget = max(cfg.max_replicas, cfg.min_replicas)
+        if (size < cfg.max_replicas and size < self._pool_cap(s, pool)
+                and s.total_pool() < budget):
+            # queue-pressure crossing: the k-th appended request tips
+            # scale_up_needed (q0 + k > target_queue * size)
+            need = math.floor(cfg.target_queue * max(size, 1)
+                              - pool.queue_len()) + 1
+            if need <= 0:
+                return now
+            k = s.cursor + need - 1
+            if k < len(arr):
+                return float(arr[k])
+        return _INF
+
+    def _bulk_append(self, s: _ModelState, lo: int, hi: int,
+                     pool: _Pool) -> None:
+        """Append ledger rows [lo, hi) to ``pool``'s pending queues in row
+        (= arrival) order: the vectorized equivalent of per-row _arrive
+        when routing is pinned to one pool and admission is off."""
+        if hi <= lo:
+            return
+        nc = len(s.classes)
+        if s.combo_rows is None:
+            # the class/version columns are immutable after init, so the
+            # per-combo row lists are computed once and every later span
+            # split is two searchsorteds + one slice per combo present
+            combo_full = s.ver * nc + s.cls_code
+            s.combo_rows = {int(c): np.flatnonzero(combo_full == c)
+                            for c in np.unique(combo_full)}
+        if len(s.combo_rows) == 1:
+            # the common case: one class, one version -> one extend
+            code = next(iter(s.combo_rows))
+            key = (code // nc, s.classes[code % nc].name)
+            pool.pending.setdefault(key, IndexQueue()).extend(range(lo, hi))
+            return
+        # queues are created (and a mixed span appended) in first-row
+        # order, so the pending-dict key order matches the scalar engine's
+        present = []
+        for code, rows_c in s.combo_rows.items():
+            a = int(np.searchsorted(rows_c, lo))
+            b = int(np.searchsorted(rows_c, hi))
+            if b > a:
+                present.append((int(rows_c[a]), code, rows_c, a, b))
+        present.sort()
+        for _, code, rows_c, a, b in present:
+            key = (code // nc, s.classes[code % nc].name)
+            pool.pending.setdefault(key, IndexQueue()).extend(
+                rows_c[a:b].tolist())
+
+    def _grouped_append(self, s: _ModelState, rows: np.ndarray,
+                        combo: np.ndarray, pool: _Pool) -> None:
+        """Append ledger ``rows`` (ascending, ``combo`` their version x
+        class codes) to ``pool``'s per-key queues: rows stay in arrival
+        order within each key and queues are created in first-appearance
+        order, exactly like a per-row _arrive loop over the same rows."""
+        codes, first = np.unique(combo, return_index=True)
+        for j in np.argsort(first, kind="stable"):
+            code = int(codes[j])
+            sel = rows[np.nonzero(combo == code)[0]]
+            key = (code // len(s.classes),
+                   s.classes[code % len(s.classes)].name)
+            pool.pending.setdefault(key, IndexQueue()).extend(sel.tolist())
+
+    def _arrive(self, s: _ModelState, i: int, t: float) -> None:
+        pool = self._route(s, i)
+        if self._admit(s, pool, i, t):
+            key = (int(s.ver[i]), s.slo(i).name)
+            pool.pending.setdefault(key, IndexQueue()).append(i)
+
+    def _apply_event(self, st: dict, t: float, kind: str, m: str, data,
+                     events: EventHeap, down: dict, step: _Step) -> None:
+        if kind == "fail":
+            down[data] = down.get(data, 0) + 1
+            if down[data] == 1:
+                step.touched |= self._outage_edge(
+                    st, t, down, events, reason="fail", cloud=data)
+            return
+        if kind == "recover":
+            down[data] -= 1
+            if down[data] == 0:
+                del down[data]
+                step.touched |= self._outage_edge(
+                    st, t, down, events, reason="recover", cloud=data)
+            return
+        if kind == "replan":
+            step.touched |= self._apply_migration(
+                st, t, data.plan, events, down)
+            return
+        if kind == "probe":
+            step.probe_due = True
+            return
+        if kind == "scrape":
+            step.scrape_due = True
+            return
+        s = st[m]
+        if kind == "arr":                # scalar engine only
+            self._arrive(s, data, t)
+            step.touched.add(m)
+        elif kind == "up":
+            cloud, gen, forced_cold = data
+            pool = s.pools[cloud]
+            if gen != pool.generation:
+                return               # scheduled before a drain
+            pool.scheduled_up -= 1
+            warm = (not s.dep.autoscaler.cfg.cold_scale_up
+                    and not forced_cold)
+            pool.replicas[s.next_rid] = _Replica(
+                s.next_rid, warm=warm, last_active=t, created_s=t)
+            if s.dep.autoscaler.tracks_idle:
+                # a replica that joins after the queue drained
+                # would otherwise never get an idle check
+                events.push(t + s.dep.autoscaler.cfg.idle_window_s,
+                            "idle", m, (cloud, s.next_rid, t))
+            s.next_rid += 1
+            step.touched.add(m)
+        elif kind == "free":
+            cloud, rid, epoch = data
+            pool = s.pools[cloud]
+            r = pool.replicas.get(rid)
+            if r is not None and r.epoch == epoch:
+                # real completion (preempted batches bumped the
+                # epoch): feed the burn monitor BEFORE the batch
+                # is forgotten (spans/metrics fold off-loop)
+                if r.inflight is not None:
+                    self._complete(s, pool, r.inflight, t)
+                r.busy = False
+                r.inflight = None
+                r.last_active = t
+                if pool.weight <= 0 and pool.queue_len() == 0:
+                    # drained-away pool: the last in-flight batch
+                    # just finished, release the replica now
+                    self._retire(s, pool, r, t, st)
+                elif s.dep.autoscaler.tracks_idle:
+                    events.push(t + s.dep.autoscaler.cfg.idle_window_s,
+                                "idle", m, (cloud, rid, t))
+                step.touched.add(m)
+        else:                        # "idle"
+            step.idle_checks.append((m, data))
+
+    def _finish_timestep(self, st: dict, t: float, events: EventHeap,
+                         down: dict, step: _Step,
+                         arrivals_left: bool = False) -> None:
+        """The shared tail of one timestep: dispatch + autoscale for every
+        touched model, then due probes/scrapes, then idle expiries.
+        ``arrivals_left`` keeps the periodic timers armed in vector mode,
+        where pending arrivals are invisible to the heap (the dead-tail
+        rule reads "no work AND only timers queued")."""
+        if self.burn is not None:
+            # stale alerts must resolve on the clock, not only on the next
+            # observation: a post-traffic firing alert would otherwise keep
+            # pressure() > 0 and sustain a scale-up/idle-retire livelock
+            self.burn.age(t)
+        # sorted: set order depends on PYTHONHASHSEED, and which
+        # model dispatches first decides shared-capacity races --
+        # invariant 4 promises cross-process determinism
+        for m in sorted(step.touched):
+            self._dispatch(st[m], t, events)
+            self._autoscale(st[m], t, events, st, down)
+        if step.probe_due:
+            for m in sorted(self._probe(st, t, events, down)):
+                self._dispatch(st[m], t, events)
+                self._autoscale(st[m], t, events, st, down)
+            if (self._work_left(st) or arrivals_left
+                    or not events.only_timers()):
+                events.push(t + self.replan.check_every_s,
+                            "probe", "", None)
+        if step.scrape_due:
+            self._scrape(st, t)
+            if (self._work_left(st) or arrivals_left
+                    or not events.only_timers()):
+                events.push(t + self.scrape_every_s, "scrape", "", None)
+        for m, payload in step.idle_checks:
+            self._maybe_retire(st[m], t, payload, st)
 
     def _complete(self, s: _ModelState, pool: _Pool, fl: dict,
                   t: float) -> None:
@@ -1123,7 +1381,7 @@ class Gateway:
             for i in range(n):
                 root = tracer.start("gateway.request", float(s.arr[i]),
                                     parent=run, links=links, model=m,
-                                    idx=i, cls=s.cls[i].name)
+                                    idx=i, cls=s.slo(i).name)
                 cursor, requeued = root.t0, False
                 for rec in by_req[i]:
                     q = tracer.start("gateway.queue", cursor, parent=root,
@@ -1195,21 +1453,35 @@ class Gateway:
         # shedder is per-pool (_pool_base) so a slow-but-honest split
         # cloud cannot make replanning oscillate -- DESIGN.md S3.
         base = s.deadline_base
+        # shed requests are excluded exactly once: reported via class_shed,
+        # never in the latency percentiles
+        keep = ~s.shed
+        lats_arr = s.lat[keep]
+        codes = s.cls_code[keep]
+        lats = lats_arr.tolist()
         cls_lats: dict[str, list] = {}
         cls_miss: dict[str, int] = {}
-        lats = []
-        for i in range(len(s.arr)):
-            if s.shed[i]:                # shed exactly once, reported via
-                continue                 # class_shed, never in percentiles
-            c = s.cls[i]
-            lats.append(float(s.lat[i]))
-            cls_lats.setdefault(c.name, []).append(float(s.lat[i]))
-            if s.lat[i] > c.deadline_mult * base:
-                cls_miss[c.name] = cls_miss.get(c.name, 0) + 1
+        for code, c in enumerate(s.classes):
+            mask = codes == code
+            if not mask.any():
+                continue
+            vals = lats_arr[mask]
+            cls_lats[c.name] = vals.tolist()
+            miss = int((vals > c.deadline_mult * base).sum())
+            if miss:
+                cls_miss[c.name] = miss
         n = len(s.arr)
         window = float(s.arr.max() - s.arr.min()) if n > 1 else 0.0
-        if window <= 1e-9:               # pure burst: fall back to the span
-            window = max(total - float(s.arr.min()), 1e-9)
+        if window <= 1e-9:
+            # pure burst: estimate the offered window as the (collapsed)
+            # arrival span plus ONE mean service interval.  The old
+            # fallback used the whole run span (total - arr.min()), which
+            # counts drain time: a burst that ends early looked like a
+            # low trickle, under-estimating rate_rps and suppressing the
+            # replan probes that overload should arm (ISSUE 7 bugfix).
+            gap = (s.busy_s / s.served if s.served
+                   else max(total - float(s.arr.min()), 1e-9))
+            window = max(window + gap, 1e-9)
             rate = n / window
         else:
             # n arrivals span n-1 inter-arrival gaps: n/window overestimates
@@ -1319,7 +1591,7 @@ class Gateway:
         adm = self.admission
         if adm is None:
             return True
-        c = s.cls[i]
+        c = s.slo(i)
         if not c.sheddable or not math.isfinite(c.deadline_mult):
             return True
         deadline = adm.margin * c.deadline_mult * self._pool_base(s, pool)
@@ -1330,7 +1602,7 @@ class Gateway:
 
     def _shed(self, s: _ModelState, pool: _Pool, i: int, t: float, *,
               where: str) -> None:
-        c = s.cls[i]
+        c = s.slo(i)
         s.shed[i] = True
         s.class_shed[c.name] = s.class_shed.get(c.name, 0) + 1
         s.win_shed += 1
@@ -1361,8 +1633,8 @@ class Gateway:
             if not c.sheddable or not math.isfinite(c.deadline_mult):
                 continue
             deadline = adm.margin * c.deadline_mult * base
-            while q and best > float(s.arr[q[0]]) + deadline:
-                self._shed(s, pool, q.pop(0), t, where="dispatch")
+            while q and best > float(s.arr[q.peek()]) + deadline:
+                self._shed(s, pool, q.popleft(), t, where="dispatch")
 
     # -- dispatch -----------------------------------------------------------
     def _best_queue(self, s: _ModelState, pool: _Pool, keys: list,
@@ -1372,16 +1644,17 @@ class Gateway:
         def rank(k):
             q = pool.pending[k]
             w = s.slo_by_name[k[1]].weight
-            return (w * (t - float(s.arr[q[0]])), w, -q[0])
+            head = q.peek()
+            return (w * (t - float(s.arr[head])), w, -head)
         return max(keys, key=rank)
 
-    def _dispatch(self, s: _ModelState, t: float, events, seq) -> None:
+    def _dispatch(self, s: _ModelState, t: float, events: EventHeap) -> None:
         for pool in s.pools.values():
             if pool.queue_len():
-                self._dispatch_pool(s, pool, t, events, seq)
+                self._dispatch_pool(s, pool, t, events)
 
     def _dispatch_pool(self, s: _ModelState, pool: _Pool, t: float,
-                       events, seq) -> None:
+                       events: EventHeap) -> None:
         self._prune_hopeless(s, pool, t)
         while True:
             keys = [k for k, q in pool.pending.items() if q]
@@ -1411,14 +1684,13 @@ class Gateway:
                 self.log.record("gateway:preempt", 0.0, model=s.dep.name,
                                 t_sim=round(t, 6), rid=r.rid, requeued=n_back,
                                 by=key[1], cloud=pool.profile.name)
-            self._assign(s, pool, r, key, t, events, seq)
+            self._assign(s, pool, r, key, t, events)
 
     def _assign(self, s: _ModelState, pool: _Pool, r: _Replica, key: tuple,
-                t: float, events, seq) -> None:
+                t: float, events: EventHeap) -> None:
         dep = s.dep
         v, cname = key
-        take = pool.pending[key][:dep.max_batch]
-        pool.pending[key] = pool.pending[key][len(take):]
+        take = pool.pending[key].take(dep.max_batch)
         cold = 0.0
         if not r.warm:
             cold = pool.profile.model_load_s
@@ -1435,10 +1707,14 @@ class Gateway:
         # path, not the primary's (per-pool promise; the primary-relative
         # one is reported post-run in per_class) -- ISSUE 4 bugfix
         pool_base = self._pool_base(s, pool)
-        for i in take:
-            s.lat[i] = done - s.arr[i]
-            if s.lat[i] > s.cls[i].deadline_mult * pool_base:
-                s.win_miss += 1
+        idx = np.fromiter(take, np.intp, b)
+        lats = done - s.arr[idx]
+        s.lat[idx] = lats
+        # the batch is single-class (queues key on class), so one scalar
+        # threshold covers it; elementwise semantics match the old per-row
+        # compare bit for bit (an inf deadline never counts as a miss)
+        s.win_miss += int((lats > s.slo_by_name[cname].deadline_mult
+                           * pool_base).sum())
         s.win_n += b
         s.served += b
         s.busy_s += svc
@@ -1465,8 +1741,8 @@ class Gateway:
                       "slo": s.slo_by_name[cname], "backend": backend.name,
                       "service_s": svc, "done": done, "record": rec,
                       "win_epoch": s.win_epoch}
-        heapq.heappush(events, (done, next(seq), "free", dep.name,
-                                (pool.profile.name, r.rid, r.epoch)))
+        events.push(done, "free", dep.name,
+                    (pool.profile.name, r.rid, r.epoch))
 
     def _reclaim(self, s: _ModelState, pool: _Pool, r: _Replica,
                  t: float) -> int:
@@ -1479,14 +1755,16 @@ class Gateway:
         fl = r.inflight
         take = fl["idx"]
         key = (fl["v"], fl["cls"])
-        pool.pending[key] = sorted(take + pool.pending.get(key, []))
+        old = pool.pending.get(key)
+        pool.pending[key] = IndexQueue(
+            sorted(take + (list(old) if old else [])))
         # only undo window counts the batch contributed to the CURRENT
         # probe window; a pre-reset batch was already flushed with its
         # window and must not distort this one
         undo_window = fl["win_epoch"] == s.win_epoch
         pool_base = self._pool_base(s, pool)     # mirror _assign's charge
         for i in take:
-            if undo_window and s.lat[i] > s.cls[i].deadline_mult \
+            if undo_window and s.lat[i] > s.slo(i).deadline_mult \
                     * pool_base:
                 s.win_miss -= 1
             s.lat[i] = -1.0
@@ -1520,7 +1798,7 @@ class Gateway:
             live = {c: 1.0 / len(alts) for c in alts}
         return {c: live.get(c, 0.0) for c in s.pools}
 
-    def _outage_edge(self, st, t, down, events, seq, *, reason: str,
+    def _outage_edge(self, st, t, down, events, *, reason: str,
                      cloud: str) -> set:
         """A cloud just died or came back: every model re-derives its live
         weights from the nominal split and the down set.  The edge is a
@@ -1542,12 +1820,12 @@ class Gateway:
             else:
                 why = "fail"
             self._set_weights(s, t, desired, reason=why, events=events,
-                              seq=seq, st=st, down=down,
+                              st=st, down=down,
                               edge_cloud=cloud if reason == "fail" else None)
             touched.add(name)
         return touched
 
-    def _apply_migration(self, st, t, plan, events, seq, down) -> set:
+    def _apply_migration(self, st, t, plan, events, down) -> set:
         """Apply a MigrationPlan (or raw {model: {cloud: weight}}) live:
         one weight shift per step, opening pools for clouds the deployment
         has not served from before (gateway:migrate reason=plan)."""
@@ -1579,14 +1857,14 @@ class Gateway:
                             weights={c: round(w, 6)
                                      for c, w in step.weights.items()})
             self._set_weights(s, t, dict(step.weights), reason="migrate",
-                              events=events, seq=seq, st=st, down=down,
+                              events=events, st=st, down=down,
                               update_nominal=True,
                               size_hint=dict(step.replicas) or None)
             touched.add(step.model)
         return touched
 
     def _set_weights(self, s: _ModelState, t: float, target: dict, *,
-                     reason: str, events, seq, st, down,
+                     reason: str, events, st, down,
                      update_nominal: bool = False,
                      size_hint: Optional[dict] = None,
                      edge_cloud: Optional[str] = None) -> None:
@@ -1648,10 +1926,24 @@ class Gateway:
             for q in pool.pending.values():
                 pend.extend(q)
             pool.pending = {}
-        for i in sorted(pend):
-            pool = self._route(s, i)
-            key = (int(s.ver[i]), s.cls[i].name)
-            pool.pending.setdefault(key, []).append(i)
+        pend.sort()
+        live = [p for p in s.pools.values() if p.weight > 0]
+        if pend and len(live) <= 1:
+            # one destination for the whole backlog (single live pool, or
+            # full outage waiting on the primary): _route is constant over
+            # pend, so the drain folds to one grouped append -- the exact
+            # order the per-row loop below would produce.  This is the
+            # failover hot path at scale (the backlog is the overload).
+            dest = live[0] if live else s.pools[dep.profile.name]
+            rows = np.asarray(pend, dtype=np.intp)
+            self._grouped_append(
+                s, rows, s.ver[rows] * len(s.classes) + s.cls_code[rows],
+                dest)
+        else:
+            for i in pend:
+                pool = self._route(s, i)
+                key = (int(s.ver[i]), s.slo(i).name)
+                pool.pending.setdefault(key, IndexQueue()).append(i)
         # relaunch on pools that just came alive
         gainers = [(c, p) for c, p in s.pools.items()
                    if p.weight > 0 and old_live.get(c, 0.0) <= 0
@@ -1669,7 +1961,7 @@ class Gateway:
                 share, pool.queue_len(),
                 self._pool_headroom(st, s, pool, assume_live=True))
             for i in range(n):
-                self._launch(s, pool, t, events, seq, st, down,
+                self._launch(s, pool, t, events, st, down,
                              from_zero=(i == 0 and pool.queue_len() > 0),
                              forced_cold=True)
         norm = self._norm_weights(s)
@@ -1726,7 +2018,7 @@ class Gateway:
         return self.burn.pressure(s.dep.name,
                                   s.dep.autoscaler.cfg.target_queue)
 
-    def _probe(self, st, t, events, seq, down) -> set:
+    def _probe(self, st, t, events, down) -> set:
         """One auto-replan check over every model (ReplanConfig)."""
         cfg = self.replan
         touched = set()
@@ -1811,7 +2103,7 @@ class Gateway:
                                 t_sim=round(t, 6), src=src_c, dst=pick.cloud,
                                 delta=round(delta, 6), reason=s.streak_why)
                 self._set_weights(s, t, target, reason="migrate",
-                                  events=events, seq=seq, st=st, down=down,
+                                  events=events, st=st, down=down,
                                   update_nominal=update_nominal)
                 touched.add(m)
             elif s.streak["cold"] >= cfg.sustain:
@@ -1838,7 +2130,7 @@ class Gateway:
                                 delta=round(target[dst.cloud], 6),
                                 reason="cost")
                 self._set_weights(s, t, target, reason="migrate",
-                                  events=events, seq=seq, st=st, down=down,
+                                  events=events, st=st, down=down,
                                   update_nominal=update_nominal)
                 touched.add(m)
         return touched
@@ -1881,7 +2173,7 @@ class Gateway:
             room = min(room, cap - self._cloud_usage(st, cloud))
         return max(room, 0)
 
-    def _autoscale(self, s: _ModelState, t: float, events, seq, st,
+    def _autoscale(self, s: _ModelState, t: float, events: EventHeap, st,
                    down) -> None:
         cfg = s.dep.autoscaler.cfg
         budget = max(cfg.max_replicas, cfg.min_replicas)
@@ -1905,7 +2197,7 @@ class Gateway:
                                     model=s.dep.name,
                                     cloud=pool.profile.name,
                                     t_sim=round(t, 6))
-                self._launch(s, pool, t, events, seq, st, down,
+                self._launch(s, pool, t, events, st, down,
                              from_zero=True)
                 continue
             # at most ONE launch per pool per evaluation (KPA rate-limits
@@ -1916,7 +2208,7 @@ class Gateway:
             if (s.dep.autoscaler.scale_up_needed(q, pool.size())
                     and pool.size() < self._pool_cap(s, pool)
                     and s.total_pool() < budget):
-                self._launch(s, pool, t, events, seq, st, down)
+                self._launch(s, pool, t, events, st, down)
 
     def _cloud_usage(self, st, cloud: str) -> int:
         return sum(p.size() for x in st.values()
@@ -1926,8 +2218,8 @@ class Gateway:
         if self.record_batches:
             self.usage_trace.append((t, cloud, self._cloud_usage(st, cloud)))
 
-    def _launch(self, s: _ModelState, pool: _Pool, t: float, events, seq,
-                st, down, *, from_zero: bool = False,
+    def _launch(self, s: _ModelState, pool: _Pool, t: float,
+                events: EventHeap, st, down, *, from_zero: bool = False,
                 forced_cold: bool = False) -> bool:
         cloud = pool.profile.name
         if cloud in down:                # nothing schedules on a dead cloud
@@ -1951,8 +2243,8 @@ class Gateway:
         pool.shed_pressure = 0           # the overload signal did its job
         s.trace.append((t, s.total_pool()))
         self._note_usage(st, cloud, t)
-        heapq.heappush(events, (t + delay, next(seq), "up", s.dep.name,
-                                (cloud, pool.generation, forced_cold)))
+        events.push(t + delay, "up", s.dep.name,
+                    (cloud, pool.generation, forced_cold))
         self.log.record("gateway:scale_up", delay, model=s.dep.name,
                         t_sim=round(t, 6), pool=s.total_pool(), cloud=cloud,
                         from_zero=from_zero)

@@ -1,0 +1,4 @@
+"""Shared discrete-event simulation core (DESIGN.md S6)."""
+from .engine import EventHeap, IndexQueue, Ledger
+
+__all__ = ["EventHeap", "IndexQueue", "Ledger"]

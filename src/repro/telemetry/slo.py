@@ -100,6 +100,29 @@ class BurnRateMonitor:
                 w[3] -= 1
         self._evaluate(t, key, w)
 
+    def age(self, t: float) -> None:
+        """Advance every window to simulated time ``t`` with no new
+        observation.  The short window gates on RECENCY, so an alert must
+        resolve once the burn stops even if no further requests ever
+        arrive -- but ``observe`` is the only other place eviction runs,
+        so without this a burst that ends in a firing alert pins
+        ``pressure()`` forever: the autoscaler keeps launching replicas
+        that idle out, each launch re-arms the event loop, and the run
+        never terminates.  The gateway calls this once per timestep."""
+        cfg = self.cfg
+        for key, w in self._win.items():
+            changed = False
+            while w[0] and w[0][0][0] < t - cfg.short_s:
+                if w[0].popleft()[1]:
+                    w[2] -= 1
+                changed = True
+            while w[1] and w[1][0][0] < t - cfg.long_s:
+                if w[1].popleft()[1]:
+                    w[3] -= 1
+                changed = True
+            if changed:
+                self._evaluate(t, key, w)
+
     def _evaluate(self, t: float, key: tuple, w: list) -> None:
         cfg = self.cfg
         budget = 1.0 - cfg.objective

@@ -133,3 +133,18 @@ def test_eos_frees_slot_early(setup):
     cb.eos_id = None
     cb.run(max_steps=100)
     assert r.done and len(r.output) <= 50
+
+
+def test_admission_is_fifo_under_backlog(setup):
+    """Submission order IS admission order: the queue is a deque popped
+    from the head (the old list.pop(0) was quadratic under backlog, and
+    any reordering here would starve early requests -- ISSUE 7)."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, max_slots=2, max_len=64)
+    reqs = [cb.submit([i + 1, i + 2], max_new=2) for i in range(8)]
+    done = cb.run()
+    assert len(done) == 8
+    admits = [r.admitted_step for r in reqs]     # indexed by rid order
+    assert admits == sorted(admits)              # FIFO: never leapfrogged
+    assert all(r.admitted_step >= 0 and r.finished_step >= r.admitted_step
+               for r in reqs)

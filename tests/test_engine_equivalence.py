@@ -1,0 +1,152 @@
+"""Bit-compatibility oracle for the gateway engine cutover (ISSUE 7).
+
+The vectorized engine (``Gateway.run(..., engine="vector")``, the default)
+must reproduce the scalar per-request reference loop EXACTLY -- not
+approximately -- on any seeded scenario: byte-identical EventLog dump
+(event kinds, order and payloads), identical ServeResult summaries,
+bit-identical latency lists and per-class percentiles, identical simulated
+dollars, final weights and makespan, plus the whole observability plane
+(span-tree JSON and Prometheus exposition).
+
+The scenario space is the gateway invariant suite's (splits, outages,
+admission control, live migrations, replanning, burn-rate alerts), driven
+two ways like the rest of the property suites: via hypothesis when
+installed, and via a seeded numpy fallback that always runs.
+"""
+import pytest
+
+from test_gateway_invariants import build, params_from_seed, scenario
+
+try:
+    from hypothesis import given, strategies as hyp_st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+def run_both_and_compare(p):
+    gw_s, traffic, failures, migrations = build(p)
+    out_s = gw_s.run(traffic, seed=p["seed"], failures=failures,
+                     migrations=migrations, engine="scalar")
+    gw_v, traffic, failures, migrations = build(p)
+    out_v = gw_v.run(traffic, seed=p["seed"], failures=failures,
+                     migrations=migrations, engine="vector")
+
+    # the event log is the strictest oracle: every simulator decision that
+    # matters lands here, in order, and dump() is byte-stable
+    assert gw_s.log.dump() == gw_v.log.dump()
+    assert [e["name"] for e in gw_s.log.events] \
+        == [e["name"] for e in gw_v.log.events]
+
+    assert out_s.summary() == out_v.summary()
+    assert out_s.makespan_s == out_v.makespan_s
+    assert out_s.costs == out_v.costs
+    assert out_s.cold_starts == out_v.cold_starts
+    assert set(out_s.per_model) == set(out_v.per_model)
+    for m, rs in out_s.per_model.items():
+        rv = out_v.per_model[m]
+        # bit-for-bit float equality, not approx: both engines must fold
+        # the same IEEE operations in the same order
+        assert rs.latencies_s == rv.latencies_s
+        assert rs.class_latencies == rv.class_latencies
+        assert rs.class_misses == rv.class_misses
+        assert rs.class_shed == rv.class_shed
+        assert rs.per_class() == rv.per_class()
+        assert rs.per_version == rv.per_version
+        assert rs.observed == rv.observed
+        assert rs.replica_trace == rv.replica_trace
+        assert rs.cost_usd == rv.cost_usd
+        assert rs.cost_by_cloud == rv.cost_by_cloud
+        assert rs.p50 == rv.p50 and rs.p99 == rv.p99
+    assert gw_s.final_weights == gw_v.final_weights
+    assert gw_s.batch_log == gw_v.batch_log
+    assert gw_s.usage_trace == gw_v.usage_trace
+    assert gw_s.tracer.to_json() == gw_v.tracer.to_json()
+    assert gw_s.metrics.to_prometheus() == gw_v.metrics.to_prometheus()
+    # the vector engine exists to be faster, never different: it must
+    # still account one simulated event per request
+    assert gw_s.run_stats["requests"] == gw_v.run_stats["requests"]
+    assert gw_s.run_stats["engine"] == "scalar"
+    assert gw_v.run_stats["engine"] == "vector"
+
+
+def test_unknown_engine_rejected():
+    gw, traffic, failures, migrations = build(params_from_seed(0))
+    with pytest.raises(ValueError, match="unknown engine"):
+        gw.run(traffic, seed=0, engine="turbo")
+
+
+# -- hypothesis driver (requirements-dev.txt) --------------------------------
+
+if HAS_HYPOTHESIS:
+    @hyp_st.composite
+    def scenarios(draw):
+        return scenario(
+            lambda lo, hi: draw(hyp_st.integers(lo, hi)),
+            lambda seq: draw(hyp_st.sampled_from(list(seq))),
+            lambda lo, hi: draw(hyp_st.floats(lo, hi, allow_nan=False,
+                                              allow_infinity=False)))
+
+    @given(scenarios())
+    def test_engines_bit_compatible(params):
+        run_both_and_compare(params)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_engines_bit_compatible():
+        pass
+
+
+# -- seeded numpy fallback (always runs) -------------------------------------
+
+@pytest.mark.parametrize("seed", range(20))
+def test_engines_bit_compatible_seeded(seed):
+    run_both_and_compare(params_from_seed(seed + 500))
+
+
+def test_equivalence_on_pure_burst():
+    """The bulk same-timestamp append path: one burst, one pool."""
+    p = params_from_seed(7)
+    p["models"] = p["models"][:1]
+    p["models"][0].update(split=None, standby=False, min=1, max=2)
+    p["traffic"] = [{"model": p["models"][0]["name"], "n": 500,
+                     "slo": "standard", "arrival": "burst", "rate": 0.0,
+                     "start": 0.0}]
+    p.update(failure=None, migration=None, admission=None, slo_burn=None)
+    run_both_and_compare(p)
+
+
+def test_equivalence_with_canary_split_classes():
+    """Grouped bulk append: canary versions x several SLO classes must
+    land in per-key queues in exactly the scalar engine's order."""
+    from conftest import AnalyticBackend
+    from repro.clouds.profiles import get_profile
+    from repro.serving.gateway import (AutoscalerConfig, Gateway,
+                                       TrafficSpec)
+    from repro.telemetry.events import EventLog
+
+    def mk():
+        gw = Gateway(log=EventLog(), record_batches=True)
+        gw.deploy("m", AnalyticBackend("m-v0", 0.01, 1e-4),
+                  get_profile("gcp"),
+                  canary=AnalyticBackend("m-v1", 0.012, 1e-4),
+                  canary_fraction=0.3,
+                  autoscaler=AutoscalerConfig(min_replicas=1,
+                                              max_replicas=3),
+                  max_batch=8)
+        traffic = [TrafficSpec("m", 300, arrival="poisson", rate=900.0,
+                               slo="latency"),
+                   TrafficSpec("m", 300, arrival="poisson", rate=900.0,
+                               slo="standard")]
+        return gw, traffic
+
+    gw_s, tr = mk()
+    out_s = gw_s.run(tr, seed=11, engine="scalar")
+    gw_v, tr = mk()
+    out_v = gw_v.run(tr, seed=11, engine="vector")
+    assert gw_s.log.dump() == gw_v.log.dump()
+    assert out_s.summary() == out_v.summary()
+    assert gw_s.batch_log == gw_v.batch_log
+    rs, rv = out_s.per_model["m"], out_v.per_model["m"]
+    assert rs.latencies_s == rv.latencies_s
+    assert rs.per_version == rv.per_version

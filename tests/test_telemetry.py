@@ -396,6 +396,28 @@ def test_burn_monitor_fires_and_resolves():
     assert mon.alerts and not mon.active
 
 
+def test_burn_monitor_ages_out_on_the_clock():
+    """An alert must resolve by TIME alone: after the last observation of
+    a run there is no further observe() call, so a firing alert would
+    otherwise pin pressure() forever and the gateway's scale-up /
+    idle-retire cycle never terminates (the seed-517 livelock, ISSUE 7)."""
+    log = EventLog()
+    cfg = BurnRateConfig(objective=0.9, short_s=0.5, long_s=2.5,
+                         threshold=2.0, min_n=8)
+    mon = BurnRateMonitor(cfg, log=log)
+    for k in range(8):
+        mon.observe(0.01 * k, "m", "latency", good=False)
+    assert mon.is_burning("m") and mon.pressure("m", 16) == 16
+    mon.age(0.2)                        # within the short window: still firing
+    assert mon.is_burning("m")
+    mon.age(5.0)                        # both windows empty: must resolve
+    assert not mon.is_burning("m") and mon.pressure("m", 16) == 0
+    assert [e["state"] for e in log.named("gateway:alert")] \
+        == ["firing", "resolved"]
+    mon.age(6.0)                        # idempotent on empty windows
+    assert not mon.active
+
+
 def test_burn_monitor_needs_sustained_breach():
     """A single bad observation among good ones never pages (the long
     window gates on significance)."""
