@@ -2,6 +2,13 @@
 admission into freed slots mid-flight (vLLM-style scheduling on the same
 decode path the dry-run lowers).
 
+Prompts now ingest through the disaggregated batched-prefill path by
+default (--prefill-chunk C: ceil(P/C) flash-attention prefill calls write
+the KV rows directly, then the request enters the decode slot pool); a
+teacher-forced reference leg (--prefill-chunk 0) drains the same mix and
+the outputs are asserted identical -- the oracle contract of
+tests/test_prefill_oracle.py, demonstrated end to end.
+
     PYTHONPATH=src python examples/continuous_batching.py --arch h2o-danube-3-4b
 """
 import argparse
@@ -9,6 +16,7 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import registry
 from repro.models import lm
@@ -21,27 +29,47 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="0 = teacher-forced seed path only")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    cb = ContinuousBatcher(cfg, params, max_slots=args.slots, max_len=96)
-    reqs = [cb.submit([10 + i, 20 + i, 30 + i], max_new=args.max_new)
-            for i in range(args.requests)]
-    t0 = time.perf_counter()
-    done = cb.run()
-    wall = time.perf_counter() - t0
-    print(json.dumps({
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
+               for _ in range(args.requests)]
+
+    def drain(pc):
+        cb = ContinuousBatcher(cfg, params, max_slots=args.slots,
+                               max_len=96, prefill_chunk=pc)
+        reqs = [cb.submit(list(p), max_new=args.max_new) for p in prompts]
+        t0 = time.perf_counter()
+        done = cb.run()
+        assert len(done) == args.requests
+        return cb, reqs, time.perf_counter() - t0
+
+    cb, reqs, wall = drain(args.prefill_chunk)
+    summary = {
         "arch": cfg.name,
         "requests": args.requests,
         "slots": args.slots,
+        "prefill_chunk": args.prefill_chunk,
+        "prefill_stats": dict(cb.prefill_stats) if args.prefill_chunk else None,
         "engine_steps": cb.step_count,
         "wall_s": round(wall, 2),
         "tokens_generated": sum(len(r.output) for r in reqs),
         "admission_steps": [r.admitted_step for r in reqs],
         "sample_output": reqs[0].output,
-    }, indent=1))
-    assert len(done) == args.requests
+    }
+    if args.prefill_chunk:
+        # oracle leg: the seed path must emit the exact same tokens
+        _, ref, ref_wall = drain(0)
+        assert [r.output for r in ref] == [r.output for r in reqs], \
+            "disaggregated prefill diverged from teacher-forced reference"
+        summary["oracle_ok"] = True
+        summary["teacher_forced_wall_s"] = round(ref_wall, 2)
+    print(json.dumps(summary, indent=1))
 
 
 if __name__ == "__main__":

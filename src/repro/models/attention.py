@@ -145,6 +145,82 @@ def gqa_decode(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
     return out, {"k": k_cache, "v": v_cache}
 
 
+def gqa_prefill(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
+                cfg: ArchConfig, *, window: int = 0):
+    """Chunked prefill: C prompt tokens at once against the decode cache.
+
+    x: (B,C,D); positions: (B,C) (or (B,3,C) M-RoPE) absolute, contiguous
+    ascending; cache {k,v:(B,S,Hkv,hd)}.  Writes the chunk's K/V rows into
+    the cache and attends every query with the same masked softmax the
+    one-token decode path (`gqa_decode` -> decode_attention_ref) uses, so a
+    P-token prompt costs O(P/C) calls instead of P decode steps while
+    producing decode-identical logits: rows past a query's position differ
+    (written here, zero in decode) but are masked to the same exact NEG_INF
+    before the softmax.  Returns (out (B,C,D), new_cache)."""
+    b, c, _ = x.shape
+    hq = cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = _rope(q, positions, cfg)                                   # (B,C,Hq,hd)
+    k = _rope(k, positions, cfg)                                   # (B,C,Hkv,hd)
+    tpos = _tpos(positions, cfg)                                   # (B,C) int
+    cache_size = cache["k"].shape[1]
+    scale = q.shape[-1] ** -0.5
+    group = max(hq // k.shape[2], 1)
+    k_cd, v_cd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+
+    if window > 0:
+        # Ring buffer: reconstruct, per query, the ring exactly as it stood
+        # at that query's decode step.  Slot s at time t holds position
+        # cand = t - ((t - s) % size); if cand falls inside this chunk the
+        # key is a chunk row, otherwise it is the pre-chunk ring content.
+        size = min(window, cache_size)
+        slots = jnp.arange(size)
+        start = tpos[:, :1]                                        # chunk offset
+        cand = tpos[:, :, None] - ((tpos[:, :, None] - slots[None, None, :]) % size)
+        from_chunk = cand >= start[:, :, None]                     # (B,C,size)
+        idx = jnp.clip(cand - start[:, :, None], 0, c - 1)
+        b3 = jnp.arange(b)[:, None, None]
+        sel = from_chunk[..., None, None]
+        keys = jnp.where(sel, k_cd[b3, idx], cache["k"][:, None])  # (B,C,size,Hkv,hd)
+        vals = jnp.where(sel, v_cd[b3, idx], cache["v"][:, None])
+        keys = jnp.repeat(keys, group, axis=3) if group > 1 else keys
+        vals = jnp.repeat(vals, group, axis=3) if group > 1 else vals
+        logits = jnp.einsum("bqhd,bqkhd->bqhk", q.astype(keys.dtype), keys,
+                            preferred_element_type=jnp.float32) * scale
+        eff_len = jnp.minimum(tpos + 1, size)                      # (B,C)
+        valid = slots[None, None, :] < eff_len[:, :, None]
+        logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bqhk,bqkhd->bqhd", probs.astype(vals.dtype), vals,
+                       preferred_element_type=jnp.float32).astype(q.dtype)
+        # final ring state: per slot, the last chunk position that maps there
+        # (deterministic gather -- scatter with duplicate ring indices is not)
+        last = tpos[:, -1:]
+        cand_f = last - ((last - slots[None, :]) % size)           # (B,size)
+        sel_f = (cand_f >= start)[..., None, None]
+        idx_f = jnp.clip(cand_f - start, 0, c - 1)
+        b2 = jnp.arange(b)[:, None]
+        k_cache = jnp.where(sel_f, k_cd[b2, idx_f], cache["k"])
+        v_cache = jnp.where(sel_f, v_cd[b2, idx_f], cache["v"])
+    else:
+        b2 = jnp.arange(b)[:, None]
+        k_cache = cache["k"].at[b2, tpos].set(k_cd)
+        v_cache = cache["v"].at[b2, tpos].set(v_cd)
+        keys = jnp.repeat(k_cache, group, axis=2) if group > 1 else k_cache
+        vals = jnp.repeat(v_cache, group, axis=2) if group > 1 else v_cache
+        logits = jnp.einsum("bqhd,bkhd->bqhk", q.astype(keys.dtype), keys,
+                            preferred_element_type=jnp.float32) * scale
+        valid = jnp.arange(cache_size)[None, None, :] < (tpos[:, :, None] + 1)
+        logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bqhk,bkhd->bqhd", probs.astype(vals.dtype), vals,
+                       preferred_element_type=jnp.float32).astype(q.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
 def gqa_decode_stacked(p: Params, x: jax.Array, stacked: dict, g: int,
                        positions: jax.Array, cfg: ArchConfig, *, window: int = 0):
     """One-token decode writing DIRECTLY into the layer-stacked cache
@@ -336,6 +412,40 @@ def mla_decode(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
                      preferred_element_type=jnp.float32)               # (B,H,r)
     o = jnp.einsum("bhr,rhk->bhk", o_c.astype(x.dtype), p["w_uv"])     # (B,H,dv)
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_prefill(p: Params, x: jax.Array, cache: dict, positions: jax.Array,
+                cfg: ArchConfig):
+    """Chunked prefill in the absorbed form over the compressed cache.
+
+    x: (B,C,D); positions: (B,C) absolute, contiguous ascending.  Decode
+    twin of `mla_decode`: writes the chunk's compressed rows, then runs the
+    same absorbed-einsum masked softmax for all C queries at once."""
+    b, c = x.shape[:2]
+    r = cfg.kv_lora_rank
+    cc = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])                  # (B,C,r+dr)
+    c_new, krope_new = cc[..., :r], cc[..., r:]
+    krope_new = apply_rope(krope_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    b2 = jnp.arange(b)[:, None]
+    c_kv = cache["c_kv"].at[b2, positions].set(c_new.astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[b2, positions].set(krope_new.astype(cache["k_rope"].dtype))
+
+    q_nope = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"])             # (B,C,H,dn)
+    q_rope = apply_rope(jnp.einsum("bsd,dhk->bshk", x, p["w_qr"]), positions,
+                        cfg.rope_theta)                            # (B,C,H,dr)
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"])
+    logits = (jnp.einsum("bqhr,bsr->bqhs", q_abs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhk,bsk->bqhs", q_rope.astype(k_rope.dtype), k_rope,
+                           preferred_element_type=jnp.float32)) * _mla_scale(cfg)
+    valid = jnp.arange(c_kv.shape[1])[None, None, :] <= positions[:, :, None]
+    logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_c = jnp.einsum("bqhs,bsr->bqhr", probs.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_c.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 

@@ -187,6 +187,36 @@ def slot_decode(p: Params, x: jax.Array, cache, positions, cfg: ArchConfig,
     return x, new_cache
 
 
+def _mixer_prefill(p, x, cache, positions, cfg, kind):
+    if kind in ("global", "local"):
+        window = cfg.sliding_window if kind == "local" else 0
+        return attn.gqa_prefill(p, x, cache, positions, cfg, window=window)
+    if kind == "mla":
+        return attn.mla_prefill(p, x, cache, positions, cfg)
+    pre = {"mamba2": ssm_mod.mamba2_prefill, "mlstm": ssm_mod.mlstm_prefill,
+           "slstm": ssm_mod.slstm_prefill}[kind]
+    return pre(p, x, cache, cfg)
+
+
+def slot_prefill(p: Params, x: jax.Array, cache, positions, cfg: ArchConfig,
+                 kind: str, ffn: str):
+    """Chunked-prefill twin of slot_decode: C tokens, decode-cache layout.
+
+    Attention kinds batch all C queries against the cache with decode-exact
+    masking; recurrent kinds scan the exact decode recurrence.  FFN / norms
+    are position-independent row ops and run batched."""
+    mix_out, new_cache = _mixer_prefill(
+        p["mixer"], nn.rms_norm(x, p["norm1"], cfg.norm_eps), cache,
+        positions, cfg, kind)
+    x = x + mix_out
+    if ffn != "none":
+        h = nn.rms_norm(x, p["norm2"], cfg.norm_eps)
+        y = (moe_mod.moe_forward(p["ffn"], h, cfg, no_drop=True)[0]
+             if ffn == "moe" else mlp_forward(p["ffn"], h, cfg))
+        x = x + y
+    return x, new_cache
+
+
 def slot_decode_stacked(p: Params, x: jax.Array, stacked, g: int, positions,
                         cfg: ArchConfig, kind: str, ffn: str, *, enc_kv=None):
     """slot_decode against the layer-STACKED cache: attention kinds update

@@ -281,6 +281,56 @@ def decode_step(params, cfg: ArchConfig, tokens, positions, cache):
     return logits, new_cache
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens, positions, cache):
+    """Chunked prefill: C prompt tokens at once against the decode cache.
+
+    tokens: (B,C); positions: (B,C) (or (B,3,C) M-RoPE) absolute positions,
+    contiguous ascending per row.  Returns (logits (B,C,V), new_cache).
+
+    This is the decode twin of `forward`: the per-phase scan structure is
+    decode_step's, but each slot consumes the whole chunk -- attention kinds
+    write their C cache rows and attend with decode-exact masking
+    (attention.gqa_prefill / mla_prefill), recurrent kinds scan the exact
+    decode recurrence (ssm.*_prefill).  A P-token prompt therefore costs
+    O(P/C) calls instead of P decode steps, and the oracle suite
+    (tests/test_prefill_oracle.py) pins its outputs to the teacher-forced
+    decode_step reference."""
+    if cfg.family == "audio":
+        raise NotImplementedError("chunked prefill: audio enc-dec unsupported")
+    params = nn.cast_tree(params, cfg.compute_dtype)   # mixed precision
+    plan = blocks.build_plan(cfg)
+    x = _embed(params, cfg, tokens)
+    x = constrain(x, "batch", None, None)
+    new_cache: dict = {}
+
+    for pi, phase in enumerate(plan):
+        stacked = params[f"phase{pi}"]
+        pcache = cache[f"phase{pi}"]
+
+        def group_fn(h, xs, phase=phase):
+            gp, gc = xs
+            out_c = {}
+            for j, (kind, ffn) in enumerate(zip(phase.kinds, phase.ffns)):
+                h, nc = blocks.slot_prefill(gp[f"slot{j}"], h, gc[f"slot{j}"],
+                                            positions, cfg, kind, ffn)
+                out_c[f"slot{j}"] = nc
+            if phase.shared_attn:
+                w = cfg.sliding_window if gc["shared"]["k"].shape[1] <= cfg.sliding_window \
+                    else 0
+                kind = "local" if w else "global"
+                h, nc = blocks.slot_prefill(params["shared"], h, gc["shared"],
+                                            positions, cfg, kind, "mlp")
+                out_c["shared"] = nc
+            return h, out_c
+
+        x, pc = jax.lax.scan(group_fn, x, (stacked, pcache),
+                             unroll=True if cfg.scan_unroll else 1)
+        new_cache[f"phase{pi}"] = pc
+
+    logits = _head(params, cfg, x)
+    return logits, new_cache
+
+
 def init_cache(cfg: ArchConfig, batch: int, length: int) -> Any:
     """Zeroed decode caches (structure mirrors forward(collect_cache))."""
     plan = blocks.build_plan(cfg)

@@ -93,11 +93,16 @@ def _combine_group(buf_out: jax.Array, route, s: int, k: int, dtype):
     return (unsorted.reshape(s, k, d) * gates[..., None].astype(dtype)).sum(axis=1)
 
 
-def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig):
-    """x: (B,S,D) -> (y (B,S,D), aux_loss scalar)."""
+def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                no_drop: bool = False):
+    """x: (B,S,D) -> (y (B,S,D), aux_loss scalar).
+
+    no_drop: capacity = S*k so no token ever overflows -- the chunked
+    prefill path uses this to stay equivalent to one-token decode, where
+    each token is routed alone and capacity never binds."""
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    cap = capacity(cfg, s)
+    cap = s * k if no_drop else capacity(cfg, s)
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
                         p["router"].astype(jnp.float32))
 

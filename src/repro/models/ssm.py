@@ -112,6 +112,19 @@ def mamba2_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
     return out, {"ssm": hstate, "conv": window[:, 1:, :]}
 
 
+def mamba2_prefill(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """Chunk prefill: scan the exact decode recurrence over C tokens.
+
+    Bit-identical to C successive `mamba2_decode` calls (the chunkwise-
+    parallel `mamba2_forward` is NOT -- different reduction order)."""
+    def step(carry, xt):                                           # xt: (B,D)
+        out, new = mamba2_decode(p, xt[:, None, :], carry, cfg)
+        return new, out[:, 0]
+
+    carry, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), carry
+
+
 def mamba2_cache_shape(cfg: ArchConfig, batch: int):
     inner, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_heads
     return {"ssm": (batch, h, inner // h, n),
@@ -258,6 +271,16 @@ def mlstm_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
     return out, {"C": C, "n": nvec, "m": m_new}
 
 
+def mlstm_prefill(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """Chunk prefill: scan the exact one-step recurrence (decode twin)."""
+    def step(carry, xt):
+        out, new = mlstm_decode(p, xt[:, None, :], carry, cfg)
+        return new, out[:, 0]
+
+    carry, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), carry
+
+
 def mlstm_cache_shape(cfg: ArchConfig, batch: int):
     h = cfg.n_heads
     hd = cfg.d_model // h
@@ -341,6 +364,16 @@ def slstm_decode(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
     out = jnp.einsum("be,ed->bd", nn.rms_norm(y, p["scale"], cfg.norm_eps),
                      p["out_proj"])[:, None, :]
     return out, {"c": c, "n": n, "m": m, "h": hnew}
+
+
+def slstm_prefill(p: Params, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """Chunk prefill: scan the exact one-step recurrence (decode twin)."""
+    def step(carry, xt):
+        out, new = slstm_decode(p, xt[:, None, :], carry, cfg)
+        return new, out[:, 0]
+
+    carry, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), carry
 
 
 def slstm_cache_shape(cfg: ArchConfig, batch: int):

@@ -7,10 +7,18 @@ between steps -- the vLLM-style scheduling pattern, built on the same
 models.lm decode path used by the dry-run (per-sequence positions).
 
 Mechanics: every step advances ALL slots by one token through
-lm.decode_step.  A newly admitted prompt is "caught up" by teacher-forcing
-its prompt tokens through the decode path (one per step) before switching
-to generation; idle slots process a pad token whose writes land in their
-own cache rows, never leaking across slots (cache rows are per-sequence).
+lm.decode_step.  With ``prefill_chunk=0`` (the teacher-forced reference
+path) a newly admitted prompt is "caught up" by teacher-forcing its prompt
+tokens through the decode path (one per step) before switching to
+generation -- a P-token prompt costs P full decode steps across the entire
+slot pool.  With ``prefill_chunk=C`` the prompt instead runs through the
+batched prefill path (lm.prefill_chunk -> the flash-attention style masked
+chunk attention) in O(P/C) calls on a standalone one-row cache, the KV rows
+are scattered into the slot's cache row, and the sequence enters the decode
+pool with its first generated token already emitted.  The oracle suite
+(tests/test_prefill_oracle.py) pins the two paths to each other.  Idle
+slots process a pad token whose writes land in their own cache rows, never
+leaking across slots (cache rows are per-sequence).
 """
 from __future__ import annotations
 
@@ -48,13 +56,15 @@ class _Slot:
 
 class ContinuousBatcher:
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
-                 max_len: int = 128, eos_id: Optional[int] = None):
+                 max_len: int = 128, eos_id: Optional[int] = None,
+                 prefill_chunk: int = 0):
         assert cfg.family not in ("audio",), "enc-dec admission not supported"
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.prefill_chunk = int(prefill_chunk)
         self.cache = lm.init_cache(cfg, max_slots, max_len)
         self.slots = [_Slot() for _ in range(max_slots)]
         # deque: admission pops the head every step -- a plain list's
@@ -65,9 +75,23 @@ class ContinuousBatcher:
         self._next_rid = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, cfg, t, pos, c))
+        if self.prefill_chunk > 0:
+            self._prefill = jax.jit(
+                lambda p, c, t, pos: lm.prefill_chunk(p, cfg, t, pos, c))
+            self._row_cache_zeros = lm.init_cache(cfg, 1, max_len)
+            # per-phase counters the disaggregated cost model reads
+            self.prefill_stats = {"requests": 0, "chunks": 0, "tokens": 0}
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: list, max_new: int) -> Request:
+        # A prompt must leave room for at least one generated token: the
+        # done-check fires at pos >= max_len - 1 only once output exists, so
+        # an unbounded prompt used to walk pos past the cache bound with its
+        # KV writes silently dropped (out-of-range scatter) -- reject here.
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_len {self.max_len}: "
+                "no room in the KV cache to generate")
         # rid must be monotonic, not len(queue): admission pops the queue, so
         # a later submit would reuse a live rid and corrupt run()'s seen-set.
         req = Request(rid=self._next_rid, prompt=list(prompt), max_new=max_new)
@@ -96,13 +120,68 @@ class ContinuousBatcher:
 
     def _admit(self):
         for i, s in enumerate(self.slots):
-            if s.req is None and self.queue:
+            # loop: a prefilled request can finish instantly (max_new=1 /
+            # eos / cache bound), freeing the slot for the next in queue
+            while s.req is None and self.queue:
                 req = self.queue.popleft()
                 req.admitted_step = self.step_count
                 s.req = req
-                s.pos = 0
-                s.remaining_prompt = len(req.prompt)
                 self._reset_row(i)
+                if self.prefill_chunk > 0 and req.prompt:
+                    first = self._prefill_into(i, req)
+                    req.output.append(first)
+                    s.pos = len(req.prompt)
+                    s.remaining_prompt = 0
+                    self._maybe_finish(s)
+                else:
+                    s.pos = 0
+                    s.remaining_prompt = len(req.prompt)
+
+    def _maybe_finish(self, s: _Slot):
+        """Same termination predicate the decode loop applies each step."""
+        req = s.req
+        hit_eos = self.eos_id is not None and req.output \
+            and req.output[-1] == self.eos_id
+        if req.output and (len(req.output) >= req.max_new or hit_eos
+                           or s.pos >= self.max_len - 1):
+            req.done = True
+            req.finished_step = self.step_count
+            s.req = None
+
+    def _prefill_into(self, i: int, req: Request) -> int:
+        """Run the prompt through lm.prefill_chunk on a one-row cache, then
+        scatter the produced cache rows into slot i.  Returns the first
+        generated token (argmax of the last prompt position's logits)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        n = len(prompt)
+        cache = self._row_cache_zeros
+        t0 = 0
+        logits = None
+        while t0 < n:
+            c = min(self.prefill_chunk, n - t0)
+            tok = jnp.asarray(prompt[t0:t0 + c], jnp.int32)[None]
+            pos = jnp.arange(t0, t0 + c, dtype=jnp.int32)[None]
+            if self.cfg.use_mrope:
+                pos = jnp.broadcast_to(pos[:, None], (1, 3, c))
+            logits, cache = self._prefill(self.params, cache, tok, pos)
+            self.prefill_stats["chunks"] += 1
+            t0 += c
+        self.prefill_stats["tokens"] += n
+        self.prefill_stats["requests"] += 1
+        self._scatter_row(i, cache)
+        return int(np.asarray(jnp.argmax(logits[:, -1], axis=-1))[0])
+
+    def _scatter_row(self, i: int, row_cache):
+        """Copy a one-row prefill cache into row i of the shared cache."""
+        def put(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == self.max_slots:
+                return dst.at[:, i].set(src[:, 0].astype(dst.dtype))
+            return dst
+        self.cache = {
+            k: (jax.tree_util.tree_map(put, v, row_cache[k])
+                if k.startswith("phase") else v)
+            for k, v in self.cache.items()
+        }
 
     # -- engine -------------------------------------------------------------
     def step(self):

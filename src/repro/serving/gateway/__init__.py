@@ -10,17 +10,17 @@ from .placement import (Assignment, CloudCapacity, MigrationPlan,
                         est_p99_s, est_wait_s, plan_placement, replan,
                         replicas_needed)
 from .router import (SLO_CLASSES, AdmissionConfig, BatcherBackend, Deployment,
-                     FailureSpec, Gateway, GatewayResult, MigrationSpec,
-                     Predictor, ReplanConfig, RoutingConfig, ServeResult,
-                     SLOClass, TrafficSpec, resolve_slo)
+                     DisaggSpec, FailureSpec, Gateway, GatewayResult,
+                     MigrationSpec, Predictor, ReplanConfig, RoutingConfig,
+                     ServeResult, SLOClass, TrafficSpec, resolve_slo)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "PoolView",
     "Assignment", "CloudCapacity", "MigrationPlan", "MigrationStep",
     "ModelDemand", "PlacementPlan", "diff_plans", "est_p99_s", "est_wait_s",
     "plan_placement", "replan", "replicas_needed",
-    "AdmissionConfig", "BatcherBackend", "Deployment", "FailureSpec",
-    "Gateway", "GatewayResult", "MigrationSpec", "Predictor", "ReplanConfig",
-    "RoutingConfig", "ServeResult", "SLOClass",
+    "AdmissionConfig", "BatcherBackend", "Deployment", "DisaggSpec",
+    "FailureSpec", "Gateway", "GatewayResult", "MigrationSpec", "Predictor",
+    "ReplanConfig", "RoutingConfig", "ServeResult", "SLOClass",
     "SLO_CLASSES", "TrafficSpec", "resolve_slo",
 ]

@@ -32,10 +32,36 @@ class ModelDemand:
     name: str
     rate: float                  # expected offered load, req/s
     service_time_s: float        # per-request service time at typical batch
+    # disaggregated demand (ISSUE 8): split the per-request cost into the
+    # compute-bound prompt-ingest phase and the bandwidth-bound decode
+    # phase so a planner can size prefill and decode tiers separately.
+    # When both are set they OVERRIDE service_time_s for load purposes
+    # (effective per-request time = prefill_s + decode_s); left at None
+    # the blended single-phase model is unchanged.
+    prefill_s: Optional[float] = None    # compute: serial prompt ingest
+    decode_s: Optional[float] = None     # bandwidth: generation steps
+
+    @property
+    def effective_service_s(self) -> float:
+        if self.prefill_s is not None and self.decode_s is not None:
+            return self.prefill_s + self.decode_s
+        return self.service_time_s
 
     @property
     def load(self) -> float:
-        return self.rate * self.service_time_s   # Erlangs
+        return self.rate * self.effective_service_s   # Erlangs
+
+    @property
+    def prefill_load(self) -> float:
+        """Erlangs of prompt-ingest compute (0 when not disaggregated)."""
+        return self.rate * (self.prefill_s or 0.0)
+
+    @property
+    def decode_load(self) -> float:
+        """Erlangs of generation bandwidth (full load when blended)."""
+        if self.prefill_s is not None and self.decode_s is not None:
+            return self.rate * self.decode_s
+        return self.load
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +79,10 @@ class CloudCapacity:
 
 def replicas_needed(demand: ModelDemand, *,
                     target_util: float = TARGET_UTILIZATION) -> int:
-    return max(1, math.ceil(demand.load / target_util))
+    # the 1e-9 slack absorbs float noise in the Erlang arithmetic: a rate
+    # derived as k*util/t then multiplied back by t can land a hair above
+    # k*util and must not round up to an extra replica
+    return max(1, math.ceil(demand.load / target_util - 1e-9))
 
 
 def est_wait_s(demand: ModelDemand, replicas: int) -> float:
@@ -67,7 +96,7 @@ def est_wait_s(demand: ModelDemand, replicas: int) -> float:
     rho = demand.load / replicas
     if rho >= 1.0:
         return math.inf
-    return demand.service_time_s * rho / (1.0 - rho)
+    return demand.effective_service_s * rho / (1.0 - rho)
 
 
 def est_p99_s(profile: CloudProfile, demand: ModelDemand,
@@ -83,7 +112,7 @@ def est_p99_s(profile: CloudProfile, demand: ModelDemand,
     if not math.isfinite(wait):
         return math.inf
     return (profile.network_rtt_s + profile.lb_overhead_s
-            + demand.service_time_s + 3.0 * wait)
+            + demand.effective_service_s + 3.0 * wait)
 
 
 @dataclasses.dataclass
@@ -208,12 +237,14 @@ def _split_assign(d: ModelDemand, need: int, clouds: list,
     # a mixture's tail is pinned by its SLOWEST share as soon as that share
     # holds more than ~1% of traffic, so the estimate is the max over
     # pools, never a weight-average that would under-report it
+    # replace() keeps the prefill/decode split (when set) attached to each
+    # share, so disaggregated demand prices identically across pools
     est = max(est_p99_s(
         by_name[cl].profile,
-        ModelDemand(d.name, d.rate * weights[cl], d.service_time_s), n)
+        dataclasses.replace(d, rate=d.rate * weights[cl]), n)
         for cl, n in shares.items())
     waits = {cl: est_wait_s(
-        ModelDemand(d.name, d.rate * weights[cl], d.service_time_s), n)
+        dataclasses.replace(d, rate=d.rate * weights[cl]), n)
         for cl, n in shares.items()}
     cost = sum(n * by_name[cl].replica_cost_hr for cl, n in shares.items())
     for cl, n in shares.items():

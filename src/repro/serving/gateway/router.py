@@ -376,6 +376,17 @@ class BatcherBackend:
     slot waves.  Per-step wall time is measured once by draining a real
     request through the batcher (after a jit warmup drain), keeping the
     compute term hardware-true like Predictor.service_time.
+
+    With a disaggregated batcher (``prefill_chunk > 0``) the blended
+    per-step estimate splits into two MEASURED cost models (ISSUE 8):
+    ``prefill_time(P)`` -- ceil(P / chunk) prefill-kernel calls at the
+    measured per-chunk latency (prompt ingest is serial per request, it
+    runs on a one-row cache at admission) -- and ``decode_time(steps)`` --
+    per-step decode latency times steps, shared by every occupied slot.
+    The two phases are separated by timing two workload points (a
+    prompt_len-token prompt and a 1-token prompt, both generating
+    gen_tokens) and solving the resulting 2x2 system in (chunk, step)
+    counts read back from the batcher's own phase counters.
     """
 
     def __init__(self, name: str, batcher, *, prompt_len: int = 8,
@@ -385,23 +396,78 @@ class BatcherBackend:
         self.prompt_len = prompt_len
         self.gen_tokens = gen_tokens
         self._step_time: Optional[float] = None
+        self._chunk_time: Optional[float] = None
 
-    def _measure(self) -> float:
+    @property
+    def disaggregated(self) -> bool:
+        return getattr(self.batcher, "prefill_chunk", 0) > 0
+
+    def _timed_run(self, prompt: list) -> tuple:
+        """One timed submit+drain; returns (wall_s, chunks, steps) deltas."""
+        b = self.batcher
+        c0 = b.prefill_stats["chunks"] if self.disaggregated else 0
+        s0 = b.step_count
+        b.submit(prompt, self.gen_tokens)
+        t0 = time.perf_counter()
+        b.run()
+        dt = time.perf_counter() - t0
+        c1 = b.prefill_stats["chunks"] if self.disaggregated else 0
+        return dt, c1 - c0, b.step_count - s0
+
+    def _measure(self) -> None:
         prompt = [1 + (i % 97) for i in range(self.prompt_len)]
         self.batcher.submit(prompt, self.gen_tokens)
         self.batcher.run()                       # warmup: jit compile
-        steps0 = self.batcher.step_count
-        self.batcher.submit(prompt, self.gen_tokens)
-        t0 = time.perf_counter()
-        self.batcher.run()
-        dt = time.perf_counter() - t0
-        return dt / max(self.batcher.step_count - steps0, 1)
+        if not self.disaggregated:
+            dt, _, steps = self._timed_run(prompt)
+            self._step_time = dt / max(steps, 1)
+            self._chunk_time = self._step_time
+            return
+        self.batcher.submit([1], self.gen_tokens)
+        self.batcher.run()                       # warm the short-chunk shape
+        dt_a, ch_a, st_a = self._timed_run(prompt)
+        dt_b, ch_b, st_b = self._timed_run([1])
+        det = ch_a * st_b - ch_b * st_a
+        if abs(det) > 1e-12:
+            chunk = (dt_a * st_b - dt_b * st_a) / det
+            step = (ch_a * dt_b - ch_b * dt_a) / det
+        else:            # prompt fits one chunk: phases indistinguishable
+            chunk = step = (dt_a + dt_b) / max(ch_a + st_a + ch_b + st_b, 1)
+        self._chunk_time = max(chunk, 1e-9)
+        self._step_time = max(step, 1e-9)
+
+    def _ensure_measured(self) -> None:
+        if self._step_time is None:
+            self._measure()
+
+    def prefill_time(self, prompt_tokens: Optional[int] = None) -> float:
+        """Measured prompt-ingest cost for ONE request: ceil(P / chunk)
+        prefill calls when disaggregated, P teacher-forced decode steps
+        otherwise."""
+        self._ensure_measured()
+        p = self.prompt_len if prompt_tokens is None else int(prompt_tokens)
+        if not self.disaggregated:
+            return p * self._step_time
+        chunk = max(self.batcher.prefill_chunk, 1)
+        return math.ceil(p / chunk) * self._chunk_time
+
+    def decode_time(self, steps: Optional[int] = None) -> float:
+        """Measured generation cost: per-step decode latency x steps
+        (every occupied slot advances together, so a wave shares this)."""
+        self._ensure_measured()
+        n = self.gen_tokens if steps is None else int(steps)
+        return n * self._step_time
 
     def service_time(self, b: int) -> float:
-        if self._step_time is None:
-            self._step_time = self._measure()
+        self._ensure_measured()
         waves = math.ceil(b / self.batcher.max_slots)
-        return waves * (self.prompt_len + self.gen_tokens) * self._step_time
+        if not self.disaggregated:
+            return waves * (self.prompt_len + self.gen_tokens) \
+                * self._step_time
+        # prompt ingest is serial per request (one-row prefill cache at
+        # admission); generation advances whole slot waves per step
+        return (b * self.prefill_time(self.prompt_len)
+                + waves * self.decode_time(self.gen_tokens))
 
     def generate(self, prompts: list, max_new: int) -> list:
         """Real generation passthrough (not simulated)."""
@@ -514,6 +580,53 @@ class TrafficSpec:
 
 
 @dataclasses.dataclass
+class DisaggSpec:
+    """Opt-in prefill/decode disaggregation for one deployment (ISSUE 8,
+    DESIGN.md §7).  All gateway disagg machinery -- pool kinds, KV-block
+    accounting, the cache-residency routing term, cache-exhaustion
+    shedding -- is DORMANT unless a deployment carries one of these.
+
+    ``kv_blocks`` budgets KV-cache blocks per pool (an int for every pool
+    or {cloud: blocks}; 0 = unaccounted).  A request holds
+    ``ceil((prompt_tokens + gen_tokens) / block_size)`` blocks from
+    dispatch to completion of its phase.  ``pool_kind`` assigns each cloud
+    "prefill" / "decode" / "both" (default "both" = unified pools).  When
+    both a "prefill" and a "decode" pool exist the deployment runs STAGED:
+    new arrivals route to prefill pools only, a finished prefill batch
+    emits ``gateway:prefill`` and re-enqueues its requests on the best
+    decode pool (the KV handoff), and request latency is charged at decode
+    completion.  ``shed_margin`` scales the block budget admission sheds
+    against (``gateway:cache_shed``)."""
+    kv_blocks: Any = 0
+    block_size: int = 16
+    prompt_tokens: int = 64              # expected prompt length / request
+    gen_tokens: int = 16                 # expected generated tokens / request
+    pool_kind: dict = dataclasses.field(default_factory=dict)
+    shed_margin: float = 1.0
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError("block_size must be > 0")
+        if self.prompt_tokens < 0 or self.gen_tokens <= 0:
+            raise ValueError("prompt_tokens must be >= 0, gen_tokens > 0")
+        if self.shed_margin <= 0:
+            raise ValueError("shed_margin must be > 0")
+
+    @property
+    def blocks_per_request(self) -> int:
+        return max(1, math.ceil((self.prompt_tokens + self.gen_tokens)
+                                / self.block_size))
+
+    def kind(self, cloud: str) -> str:
+        return self.pool_kind.get(cloud, "both")
+
+    def blocks_for(self, cloud: str) -> int:
+        if isinstance(self.kv_blocks, dict):
+            return int(self.kv_blocks.get(cloud, 0))
+        return int(self.kv_blocks)
+
+
+@dataclasses.dataclass
 class Deployment:
     name: str
     backend: Any                         # .name + .service_time(b) -> s
@@ -532,6 +645,9 @@ class Deployment:
     # span id of the pipeline deploy step that produced this deployment
     # (telemetry/trace.py): every request root span links to it, connecting
     # the serving trace to the training trace across their sim-time axes
+    disagg: Optional[DisaggSpec] = None
+    # prefill/decode disaggregation opt-in; None keeps every pre-ISSUE-8
+    # code path bit-identical (the engine-equivalence suites rely on it)
 
     @property
     def backends(self) -> list:
@@ -570,6 +686,11 @@ class _Pool:
         self.shed_pressure = 0           # sheds since the last launch/probe:
         # unmet demand the autoscaler must see as queue depth, so shedding
         # triggers scale-up instead of masking the overload
+        self.kind = "both"               # disagg stage(s) this pool serves
+        self.kv_total = 0                # KV block budget (0 = unaccounted)
+        self.kv_used = 0                 # blocks held by in-flight batches
+        self.kv_resident: dict = {}      # version -> blocks currently held
+        self.kv_warm: set = set()        # versions whose cache rows are warm
 
     def size(self) -> int:
         return len(self.replicas) + self.scheduled_up
@@ -599,6 +720,18 @@ class _ModelState:
         self.pools: dict[str, _Pool] = {}
         for prof, w in dep.placements:
             self.pools[prof.name] = _Pool(prof, w)
+        # -- disagg state (dormant unless dep.disagg is set) --
+        self.staged = False              # prefill AND decode pools exist
+        self.stage: Optional[np.ndarray] = None  # per-request phase (run())
+        self.svc_prefill = 0.0           # per-request prompt-ingest estimate
+        self.svc_decode = 0.0            # per-batch generation estimate
+        self.kv_gauge_inst: dict = {}    # cloud -> cache-occupancy gauge
+        if dep.disagg is not None:
+            for c, pool in self.pools.items():
+                pool.kind = dep.disagg.kind(c)
+                pool.kv_total = dep.disagg.blocks_for(c)
+            kinds = {p.kind for p in self.pools.values()}
+            self.staged = "prefill" in kinds and "decode" in kinds
         self.next_rid = 0                # rids are model-global: the batch
         self.trace: list = []            # audit keys (model, rid) stay unique
         self.cold_starts = 0
@@ -765,6 +898,7 @@ class Gateway:
         self.batch_log: list = []        # dicts, one per dispatched batch
         self.usage_trace: list = []      # (t, cloud, replicas_incl_scheduled)
         self.final_weights: dict = {}    # model -> {cloud: weight} post-run
+        self.final_kv: dict = {}         # disagg models: post-run kv_used
         self.run_stats: dict = {}        # last run's engine + throughput
         self._run_span = None            # open gateway.run span during run()
 
@@ -773,7 +907,8 @@ class Gateway:
                max_batch: int = 32, canary=None, canary_fraction: float = 0.0,
                standby: Optional[CloudProfile] = None,
                queue_hint: Optional[dict] = None,
-               trace_link: Optional[int] = None) -> Deployment:
+               trace_link: Optional[int] = None,
+               disagg: Optional[DisaggSpec] = None) -> Deployment:
         """``profile`` places the model on one cloud (weight 1.0);
         ``split={CloudProfile: weight}`` places it active-active (weights
         must sum to 1).  With both, ``profile`` names the primary among the
@@ -811,9 +946,37 @@ class Gateway:
             placements.append((standby, 0.0))
         hint = {c: float(w) for c, w in (queue_hint or {}).items()
                 if math.isfinite(w)}
+        if disagg is not None:
+            clouds = [p.name for p, _ in placements]
+            unknown = set(disagg.pool_kind) - set(clouds)
+            if unknown:
+                raise ValueError(f"disagg pool_kind names clouds not in the "
+                                 f"placement: {sorted(unknown)}")
+            kinds = {c: disagg.kind(c) for c in clouds}
+            bad = {c: k for c, k in kinds.items()
+                   if k not in ("prefill", "decode", "both")}
+            if bad:
+                raise ValueError(f"disagg pool_kind must be prefill / "
+                                 f"decode / both, got {bad}")
+            vals = set(kinds.values())
+            if "prefill" in vals or "decode" in vals:
+                # staged mode: every pool picks a side so every queue is
+                # stage-homogeneous, and both stages need a live pool
+                if "both" in vals:
+                    raise ValueError(
+                        "staged disagg needs every pool (standby included) "
+                        "assigned 'prefill' or 'decode'; got a 'both' pool: "
+                        f"{kinds}")
+                w_by = {p.name: w for p, w in placements}
+                for side in ("prefill", "decode"):
+                    if not any(kinds[c] == side and w_by[c] > 0
+                               for c in clouds):
+                        raise ValueError(
+                            f"staged disagg needs a weighted {side} pool, "
+                            f"got kinds={kinds}")
         dep = Deployment(name, backend, profile, autoscaler or Autoscaler(),
                          max_batch, canary, canary_fraction, standby,
-                         placements, hint, trace_link)
+                         placements, hint, trace_link, disagg)
         self.deployments[name] = dep
         return dep
 
@@ -919,6 +1082,19 @@ class Gateway:
             s.svc_est = dep.backend.service_time(dep.max_batch) / dep.max_batch
             s.deadline_base = (dep.profile.network_rtt_s
                                + dep.profile.lb_overhead_s + s.svc1)
+            if dep.disagg is not None:
+                spec = dep.disagg
+                s.stage = np.zeros(len(arr), np.int8)
+                be = dep.backend
+                if hasattr(be, "prefill_time") and hasattr(be, "decode_time"):
+                    # measured two-phase cost model (BatcherBackend)
+                    s.svc_prefill = float(be.prefill_time(spec.prompt_tokens))
+                    s.svc_decode = float(be.decode_time(spec.gen_tokens))
+                else:
+                    # blended backend: split the single-request estimate so
+                    # the disagg machinery still prices two phases
+                    s.svc_prefill = 0.5 * s.svc1
+                    s.svc_decode = s.svc1 - s.svc_prefill
             if engine == "scalar":
                 # the vector engine keeps arrivals in the sorted ledger
                 # columns and consumes them by cursor -- they never touch
@@ -1004,6 +1180,10 @@ class Gateway:
                     pool.replica_seconds += max(makespan - r.created_s, 0.0)
             costs[m] = sum(self._pool_costs(s).values())
             self.final_weights[m] = self._norm_weights(s)
+            if s.dep.disagg is not None:
+                # a drained run must have given every block back
+                self.final_kv[m] = {c: int(p.kv_used)
+                                    for c, p in s.pools.items()}
             if m in totals:
                 results[m] = self._result(s, totals[m])
                 cold[m] = s.cold_starts
@@ -1091,7 +1271,7 @@ class Gateway:
                     continue
                 hi = lo + int(np.searchsorted(s.arr[lo:], t, side="right"))
                 live = sum(1 for p in s.pools.values() if p.weight > 0)
-                if bulk_ok and live <= 1:
+                if bulk_ok and live <= 1 and s.dep.disagg is None:
                     # routing is pinned (single live pool, or everything
                     # waits on the primary) and admission is off: the
                     # whole same-t burst appends in one grouped extend
@@ -1119,6 +1299,12 @@ class Gateway:
         guarantees admission and burn monitoring are off."""
         arr = s.arr
         now = float(arr[s.cursor])
+        if s.dep.disagg is not None:
+            # per-request KV accounting / cache shed / stage routing: every
+            # arrival is a real decision, so the span skip never applies --
+            # both engines take the identical per-request path (the disagg
+            # analog of the engine-equivalence bit-compat rule)
+            return now
         live = [p for p in s.pools.values() if p.weight > 0]
         if len(live) != 1:
             # multi-pool: queue-aware routing shifts per request;
@@ -1261,7 +1447,14 @@ class Gateway:
                 # epoch): feed the burn monitor BEFORE the batch
                 # is forgotten (spans/metrics fold off-loop)
                 if r.inflight is not None:
-                    self._complete(s, pool, r.inflight, t)
+                    fl = r.inflight
+                    if fl["kv"]:            # KV blocks held dispatch->free
+                        pool.kv_used -= fl["kv"]
+                        pool.kv_resident[int(fl["v"])] -= fl["kv"]
+                    if fl["stage"] == "prefill":
+                        self._prefill_done(s, pool, fl, t)
+                    else:
+                        self._complete(s, pool, fl, t)
                 r.busy = False
                 r.inflight = None
                 r.last_active = t
@@ -1331,6 +1524,24 @@ class Gateway:
             for i in fl["idx"]:
                 burn.observe(t, m, cname, float(s.lat[i]) <= thresh)
 
+    def _prefill_done(self, s: _ModelState, pool: _Pool, fl: dict,
+                      t: float) -> None:
+        """A staged prefill batch finished: its KV rows hand off to the
+        decode tier, the requests flip to stage 1 and re-enter routing
+        (_pool_accepts narrows them to decode pools).  No latency verdict
+        yet -- the clock keeps running from the ORIGINAL arrival and the
+        decode completion charges the whole span."""
+        take = fl["idx"]
+        for i in take:
+            s.stage[i] = 1
+        self.log.record("gateway:prefill", fl["service_s"], model=s.dep.name,
+                        cloud=pool.profile.name, n=len(take),
+                        t_sim=round(t, 6), staged=True)
+        key = (fl["v"], fl["cls"])
+        for i in take:
+            dest = self._route(s, i)
+            dest.pending.setdefault(key, IndexQueue()).append(i)
+
     def _fold_metrics(self, st: dict, t: float) -> None:
         """Drain the really-completed batches queued by _complete into the
         request counters and latency sketches, chunked per class so the
@@ -1395,6 +1606,13 @@ class Gateway:
                         batch=len(rec["idx"]), rtt_lb_s=rec["rtt_lb_s"],
                         cold_s=rec["cold_s"], service_s=rec["service_s"])
                     sp.t1 = rec["end_s"]
+                    stage = rec.get("stage")
+                    if stage is not None:
+                        sp.attrs["stage"] = stage
+                        if stage == "prefill" and not rec["preempted"]:
+                            # handoff: the decode queue span opens when the
+                            # prefill batch lands, not at arrival
+                            cursor = rec["end_s"]
                     if rec["preempted"]:
                         sp.attrs["preempted"] = True
                         cursor, requeued = rec["end_s"], True
@@ -1441,6 +1659,12 @@ class Gateway:
                     accrued += sum(max(t - r.created_s, 0.0)
                                    for r in pool.replicas.values())
                 g[2].set(accrued * pool.profile.cost_per_s)
+                if s.dep.disagg is not None and pool.kv_total > 0:
+                    kg = s.kv_gauge_inst.get(c)
+                    if kg is None:
+                        kg = s.kv_gauge_inst[c] = metrics.gauge(
+                            "gateway_kv_blocks_used", model=m, cloud=c)
+                    kg.set(pool.kv_used)
         metrics.scrape(t, self.log)
 
     def _result(self, s: _ModelState, total: float) -> ServeResult:
@@ -1547,7 +1771,13 @@ class Gateway:
         ranking estimate, deliberately -- the simulation is the ground
         truth; this only has to order pools and spot hopeless deadlines."""
         size = pool.size()
-        wait = (pool.queue_len() + 1) * s.svc_est / max(size, 1)
+        est = s.svc_est
+        if s.dep.disagg is not None and pool.kind != "both":
+            # the two phases price differently (ISSUE 8): prompt ingest is
+            # serial per request, decode amortizes one wave over the batch
+            est = (s.svc_prefill if pool.kind == "prefill"
+                   else s.svc_decode / max(s.dep.max_batch, 1)) or est
+        wait = (pool.queue_len() + 1) * est / max(size, 1)
         if pool.queue_len() == 0:
             wait = max(wait, s.dep.queue_hint.get(pool.profile.name, 0.0))
         e = wait + pool.profile.network_rtt_s + pool.profile.lb_overhead_s
@@ -1555,6 +1785,35 @@ class Gateway:
             e += (s.dep.autoscaler.cfg.scale_up_delay_s
                   + pool.profile.model_load_s)
         return e
+
+    def _kv_bias(self, s: _ModelState, pool: _Pool, i: int) -> float:
+        """Cache terms added to a pool's expected completion during disagg
+        routing: a version whose KV rows are not resident on the pool pays
+        one prompt-ingest to populate them, and a pool whose projected
+        block demand exceeds its budget pays the drain time of the
+        deficit.  Zero for non-disagg deployments."""
+        spec = s.dep.disagg
+        if spec is None:
+            return 0.0
+        bias = 0.0
+        if int(s.ver[i]) not in pool.kv_warm:
+            bias += s.svc_prefill
+        if pool.kv_total > 0:
+            need = spec.blocks_per_request * (pool.queue_len() + 1)
+            free = pool.kv_total - pool.kv_used
+            if need > free:
+                per_batch = spec.blocks_per_request * max(s.dep.max_batch, 1)
+                bias += s.svc_decode * math.ceil((need - free) / per_batch)
+        return bias
+
+    def _pool_accepts(self, s: _ModelState, pool: _Pool, i: int) -> bool:
+        """Stage gate for staged disagg: new arrivals go to prefill pools,
+        prefill-complete requests to decode pools; always True otherwise
+        (so every queue stays stage-homogeneous)."""
+        if not s.staged:
+            return True
+        want = "decode" if (s.stage is not None and s.stage[i]) else "prefill"
+        return pool.kind == want
 
     def _route(self, s: _ModelState, i: int) -> _Pool:
         """Blended queue-aware routing (RoutingConfig): live pools within
@@ -1564,13 +1823,16 @@ class Gateway:
         deterministic however queues and weights move.  policy="weights"
         skips the band (pure weighted draw, the pre-ISSUE-4 behavior).
         With every weight at zero (full outage, no standby) requests wait
-        on the primary."""
-        live = [(c, p) for c, p in s.pools.items() if p.weight > 0]
+        on the primary.  Staged disagg narrows the candidates to the
+        request's stage and scores carry the KV cache terms (_kv_bias)."""
+        live = [(c, p) for c, p in s.pools.items()
+                if p.weight > 0 and self._pool_accepts(s, p, i)]
         total = sum(p.weight for _, p in live)
         if total <= 0:
             return s.pools[s.dep.profile.name]
         if self.routing.policy == "queue_aware" and len(live) > 1:
-            scored = [(self._expected_wait(s, p), c, p) for c, p in live]
+            scored = [(self._expected_wait(s, p) + self._kv_bias(s, p, i),
+                       c, p) for c, p in live]
             band = (min(e for e, _, _ in scored)
                     * (1.0 + self.routing.slack) + 1e-12)
             live = [(c, p) for e, c, p in scored if e <= band]
@@ -1587,7 +1849,26 @@ class Gateway:
     def _admit(self, s: _ModelState, pool: _Pool, i: int, t: float) -> bool:
         """Enqueue-time admission: shed the request (exactly once) when its
         expected completion already exceeds margin x the class deadline,
-        measured against the SERVING pool's own warm path."""
+        measured against the SERVING pool's own warm path.  A disagg pool
+        with a block budget additionally sheds on PROJECTED cache
+        exhaustion -- queued demand plus in-flight blocks past
+        shed_margin x the budget (``gateway:cache_shed``) -- a physical
+        memory limit, so it applies even with admission control off."""
+        spec = s.dep.disagg
+        if spec is not None and pool.kv_total > 0:
+            c = s.slo(i)
+            projected = (pool.kv_used
+                         + (pool.queue_len() + 1) * spec.blocks_per_request)
+            if (c.sheddable
+                    and projected > spec.shed_margin * pool.kv_total):
+                self.log.record("gateway:cache_shed", 0.0, model=s.dep.name,
+                                cloud=pool.profile.name, cls=c.name,
+                                idx=int(i), t_sim=round(t, 6),
+                                kv_used=int(pool.kv_used),
+                                kv_projected=int(projected),
+                                kv_total=int(pool.kv_total))
+                self._shed(s, pool, i, t, where="cache")
+                return False
         adm = self.admission
         if adm is None:
             return True
@@ -1700,25 +1981,58 @@ class Gateway:
                             cloud=pool.profile.name, t_sim=round(t, 6))
         backend = dep.backends[v]
         b = len(take)
-        svc = backend.service_time(b)
+        spec = dep.disagg
+        stage = None
+        if spec is not None and s.staged:
+            # stage-homogeneous queues make pool.kind authoritative; the
+            # head check covers the full-decode-outage fallback (a stage-1
+            # request parked on the primary must not prefill again)
+            stage = ("prefill" if pool.kind == "prefill"
+                     and not s.stage[take[0]] else "decode")
+        if stage == "prefill":
+            svc = b * s.svc_prefill        # prompt ingest is serial/request
+        elif stage == "decode":
+            svc = s.svc_decode             # one slot wave (b <= max_batch)
+        else:
+            svc = backend.service_time(b)
         done = (t + pool.profile.network_rtt_s + pool.profile.lb_overhead_s
                 + cold + svc)
-        # in-run miss window: charge against the SERVING pool's own warm
-        # path, not the primary's (per-pool promise; the primary-relative
-        # one is reported post-run in per_class) -- ISSUE 4 bugfix
-        pool_base = self._pool_base(s, pool)
-        idx = np.fromiter(take, np.intp, b)
-        lats = done - s.arr[idx]
-        s.lat[idx] = lats
-        # the batch is single-class (queues key on class), so one scalar
-        # threshold covers it; elementwise semantics match the old per-row
-        # compare bit for bit (an inf deadline never counts as a miss)
-        s.win_miss += int((lats > s.slo_by_name[cname].deadline_mult
-                           * pool_base).sum())
-        s.win_n += b
-        s.served += b
+        kv = 0
+        if spec is not None:
+            pool.kv_warm.add(int(v))       # cache rows resident (routing)
+            if pool.kv_total > 0:
+                kv = spec.blocks_per_request * b
+                pool.kv_used += kv
+                pool.kv_resident[int(v)] = \
+                    pool.kv_resident.get(int(v), 0) + kv
+            if stage is None:
+                # unified pool: the prefill share is priced inside
+                # service_time; surface it so the event log still splits
+                self.log.record("gateway:prefill", b * s.svc_prefill,
+                                model=dep.name, cloud=pool.profile.name,
+                                n=b, t_sim=round(t, 6), staged=False)
+        if stage != "prefill":
+            # in-run miss window: charge against the SERVING pool's own
+            # warm path, not the primary's (per-pool promise; the
+            # primary-relative one is reported post-run in per_class) --
+            # ISSUE 4 bugfix.  A staged prefill batch carries no latency
+            # verdict: the request is still in flight until its decode
+            # batch lands, which charges the whole arrival-to-done span.
+            pool_base = self._pool_base(s, pool)
+            idx = np.fromiter(take, np.intp, b)
+            lats = done - s.arr[idx]
+            s.lat[idx] = lats
+            # the batch is single-class (queues key on class), so one
+            # scalar threshold covers it; elementwise semantics match the
+            # old per-row compare bit for bit (an inf deadline never
+            # counts as a miss)
+            s.win_miss += int((lats > s.slo_by_name[cname].deadline_mult
+                               * pool_base).sum())
+            s.win_n += b
+            s.served += b
+            s.per_version[backend.name] = \
+                s.per_version.get(backend.name, 0) + b
         s.busy_s += svc
-        s.per_version[backend.name] = s.per_version.get(backend.name, 0) + b
         r.busy = True
         r.last_active = done
         r.epoch += 1
@@ -1733,6 +2047,8 @@ class Gateway:
                    "rtt_lb_s": pool.profile.network_rtt_s
                    + pool.profile.lb_overhead_s,
                    "cold_s": cold, "service_s": svc}
+            if stage is not None:
+                rec["stage"] = stage
             if self.record_batches:
                 self.batch_log.append(rec)
             if s.batch_recs is not None:
@@ -1740,7 +2056,7 @@ class Gateway:
         r.inflight = {"idx": take, "v": v, "cls": cname,
                       "slo": s.slo_by_name[cname], "backend": backend.name,
                       "service_s": svc, "done": done, "record": rec,
-                      "win_epoch": s.win_epoch}
+                      "win_epoch": s.win_epoch, "stage": stage, "kv": kv}
         events.push(done, "free", dep.name,
                     (pool.profile.name, r.rid, r.epoch))
 
@@ -1758,21 +2074,26 @@ class Gateway:
         old = pool.pending.get(key)
         pool.pending[key] = IndexQueue(
             sorted(take + (list(old) if old else [])))
-        # only undo window counts the batch contributed to the CURRENT
-        # probe window; a pre-reset batch was already flushed with its
-        # window and must not distort this one
-        undo_window = fl["win_epoch"] == s.win_epoch
-        pool_base = self._pool_base(s, pool)     # mirror _assign's charge
-        for i in take:
-            if undo_window and s.lat[i] > s.slo(i).deadline_mult \
-                    * pool_base:
-                s.win_miss -= 1
-            s.lat[i] = -1.0
-        if undo_window:
-            s.win_n -= len(take)
-        s.served -= len(take)
+        if fl["kv"]:                             # give the blocks back
+            pool.kv_used -= fl["kv"]
+            pool.kv_resident[int(fl["v"])] -= fl["kv"]
+        if fl["stage"] != "prefill":
+            # only undo window counts the batch contributed to the CURRENT
+            # probe window; a pre-reset batch was already flushed with its
+            # window and must not distort this one.  (A prefill batch
+            # never wrote lat/window/served counters -- see _assign.)
+            undo_window = fl["win_epoch"] == s.win_epoch
+            pool_base = self._pool_base(s, pool)  # mirror _assign's charge
+            for i in take:
+                if undo_window and s.lat[i] > s.slo(i).deadline_mult \
+                        * pool_base:
+                    s.win_miss -= 1
+                s.lat[i] = -1.0
+            if undo_window:
+                s.win_n -= len(take)
+            s.served -= len(take)
+            s.per_version[fl["backend"]] -= len(take)
         s.busy_s -= fl["service_s"]
-        s.per_version[fl["backend"]] -= len(take)
         if fl["record"] is not None:
             # the serve attempt is abandoned: the materializer turns this
             # into a preempted serve span followed by a requeued queue span
@@ -1851,7 +2172,10 @@ class Gateway:
             s = st[step.model]
             for cloud in step.weights:
                 if cloud not in s.pools:
-                    s.pools[cloud] = _Pool(step.profiles[cloud], 0.0)
+                    p = s.pools[cloud] = _Pool(step.profiles[cloud], 0.0)
+                    if s.dep.disagg is not None:
+                        p.kind = s.dep.disagg.kind(cloud)
+                        p.kv_total = s.dep.disagg.blocks_for(cloud)
             self.log.record("gateway:migrate", 0.0, model=step.model,
                             t_sim=round(t, 6), reason="plan",
                             weights={c: round(w, 6)

@@ -44,6 +44,20 @@ Gateway event vocabulary (serving/gateway/router.py, DESIGN.md S3):
   gateway:failover/recover   outage edge as seen by one deployment -- the
                              degenerate split (dead cloud's weight -> 0,
                              restored on recovery)
+  gateway:prefill            prompt-ingest accounting (DisaggSpec models
+                             only).  staged=True: a prefill-pool batch
+                             finished and its requests moved to the decode
+                             pool (duration = the prefill batch service
+                             time, n = batch size).  staged=False: a
+                             unified ("both"-pool) dispatch's prefill
+                             share, priced but not separately scheduled
+  gateway:cache_shed         projected KV-block demand for a pool's queue
+                             exceeded shed_margin x its kv_blocks budget;
+                             the request is dropped BEFORE enqueue with a
+                             paired gateway:shed at=cache (carries
+                             kv_used / kv_projected / kv_total; physical
+                             limit, so it fires even with admission
+                             control off -- sheddable classes only)
   gateway:observed           measured arrival rate + realized service time
                              per model (placement.replan input)
   gateway:alert              SLO burn-rate alert edge (telemetry/slo.py):
