@@ -1,0 +1,30 @@
+"""Shared BENCH_*.json schema machinery (ISSUE 9 satellite).
+
+Both bench suites persist a schema-versioned record and gate CI on it;
+the version bump + required-scenario + required-key checks were copied
+between ``bench_gateway.py`` and ``bench_pipeline.py`` verbatim.  This
+module is the single copy: each suite keeps its own ``BENCH_SCHEMA``
+constant and per-scenario semantic checks, but the header validation and
+the "record is missing key k" plumbing live here.
+"""
+from __future__ import annotations
+
+
+def check_header(bench: dict, schema: int, require: tuple = ()) -> dict:
+    """Validate the suite-version header and the required-scenario set;
+    returns the ``scenarios`` dict for the caller's semantic checks."""
+    if bench.get("schema") != schema:
+        raise ValueError(f"schema {bench.get('schema')} != {schema}")
+    sc = bench.get("scenarios", {})
+    missing = [name for name in require if name not in sc]
+    if missing:
+        raise ValueError(f"missing scenarios: {missing}")
+    return sc
+
+
+def require_keys(rec: dict, keys: tuple, ctx: str) -> None:
+    """Raise naming the first key absent from ``rec`` (``ctx`` locates
+    the record inside the bench JSON, e.g. ``"overload.race"``)."""
+    for k in keys:
+        if k not in rec:
+            raise ValueError(f"{ctx} missing {k}")

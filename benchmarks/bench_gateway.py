@@ -47,7 +47,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from ._schema import check_header, require_keys
+except ImportError:                      # run directly as a script (CI)
+    from _schema import check_header, require_keys
+
+from repro.clouds.capacity import CapacityMarket
 from repro.clouds.profiles import TPU_V5E, CloudProfile, get_profile
+from repro.core.pipeline import Pipeline
+from repro.pipelines import Orchestrator, RetryPolicy
 from repro.serving.gateway import (SLO_CLASSES, AdmissionConfig,
                                    AutoscalerConfig, CloudCapacity,
                                    FailureSpec, Gateway, ModelDemand,
@@ -60,10 +68,10 @@ from repro.telemetry.slo import BurnRateConfig
 from repro.telemetry.trace import Tracer
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_gateway.json"
-# schema 6: "disagg" tier (chunked-prefill vs teacher-forced token
-# throughput race over a real ContinuousBatcher, ISSUE 8); schema 5 added
-# the "scale" tier and null p50_s/p99_s for empty pools
-BENCH_SCHEMA = 6
+# schema 7: "contention" tier (training colocated with a serving burst on
+# one CapacityMarket, priority on vs off, ISSUE 9); schema 6 added the
+# "disagg" tier (chunked-prefill vs teacher-forced token throughput race)
+BENCH_SCHEMA = 7
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
 # fleet-scale offered load in Erlangs (rate derived from the measured
@@ -96,44 +104,36 @@ def _model_record(res, cold: int) -> dict:
 
 
 def validate_bench(bench: dict, require: tuple = ()) -> None:
-    """BENCH_gateway.json schema check (the CI bench-smoke gate): every
-    scenario present carries its required keys -- including the ISSUE 4
-    shed-rate fields and the recorded queue-aware-vs-weights race."""
-    if bench.get("schema") != BENCH_SCHEMA:
-        raise ValueError(f"schema {bench.get('schema')} != {BENCH_SCHEMA}")
-    sc = bench.get("scenarios", {})
-    missing = [name for name in require if name not in sc]
-    if missing:
-        raise ValueError(f"missing scenarios: {missing}")
+    """BENCH_gateway.json schema check (the CI bench-smoke gate): the
+    shared header/required-scenario machinery lives in ``_schema``; the
+    suite-specific semantic gates below cover every scenario present --
+    including the ISSUE 4 shed-rate fields, the recorded
+    queue-aware-vs-weights race and the ISSUE 9 contention ratios."""
+    sc = check_header(bench, BENCH_SCHEMA, require)
     for name, rec in sc.get("fleet", {}).get("models", {}).items():
-        for k in ("p50_s", "p99_s", "sim_cost_usd", "cold_starts",
-                  "shed", "shed_rate", "deadline_miss"):
-            if k not in rec:
-                raise ValueError(f"fleet model {name} missing {k}")
+        require_keys(rec, ("p50_s", "p99_s", "sim_cost_usd", "cold_starts",
+                           "shed", "shed_rate", "deadline_miss"),
+                     f"fleet model {name}")
     for key in ("slo_failover", "split_cost"):
         if key in sc and not sc[key]:
             raise ValueError(f"scenario {key} is empty")
     if "overload" in sc:
         o = sc["overload"]
-        for k in ("queue_aware", "weights", "race", "burn"):
-            if k not in o:
-                raise ValueError(f"overload scenario missing {k}")
+        require_keys(o, ("queue_aware", "weights", "race", "burn"),
+                     "overload scenario")
         for side in ("queue_aware", "weights"):
-            for k in ("per_class", "shed", "shed_rate"):
-                if k not in o[side]:
-                    raise ValueError(f"overload.{side} missing {k}")
+            require_keys(o[side], ("per_class", "shed", "shed_rate"),
+                         f"overload.{side}")
         race = o["race"]
-        for k in ("winner", "latency_p99_queue_aware", "latency_p99_weights",
-                  "shed_rate"):
-            if k not in race:
-                raise ValueError(f"overload race missing {k}")
+        require_keys(race, ("winner", "latency_p99_queue_aware",
+                            "latency_p99_weights", "shed_rate"),
+                     "overload race")
         if not 0 < race["shed_rate"] <= 0.5:
             raise ValueError(f"shed rate {race['shed_rate']} not in (0, .5]")
         burn = o["burn"]
-        for k in ("alerts_firing", "first_alert_seq", "first_migrate_seq",
-                  "scrapes", "spans", "slowest_request"):
-            if k not in burn:
-                raise ValueError(f"overload burn missing {k}")
+        require_keys(burn, ("alerts_firing", "first_alert_seq",
+                            "first_migrate_seq", "scrapes", "spans",
+                            "slowest_request"), "overload burn")
         if burn["alerts_firing"] < 1:
             raise ValueError("overload burn run recorded no firing alert")
         if (burn["first_migrate_seq"] is not None
@@ -141,15 +141,12 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
             raise ValueError("burn alert fired after the first migrate")
     if "scale" in sc:
         s5 = sc["scale"]
-        for k in ("requests", "models", "clouds", "oracle_requests",
-                  "scalar", "vector", "speedup", "asserted_min_speedup"):
-            if k not in s5:
-                raise ValueError(f"scale scenario missing {k}")
+        require_keys(s5, ("requests", "models", "clouds", "oracle_requests",
+                          "scalar", "vector", "speedup",
+                          "asserted_min_speedup"), "scale scenario")
         for side in ("scalar", "vector"):
-            for k in ("wall_s", "sim_events", "events_per_s",
-                      "requests_per_s"):
-                if k not in s5[side]:
-                    raise ValueError(f"scale.{side} missing {k}")
+            require_keys(s5[side], ("wall_s", "sim_events", "events_per_s",
+                                    "requests_per_s"), f"scale.{side}")
         if s5["speedup"] < s5["asserted_min_speedup"]:
             raise ValueError(
                 f"scale speedup {s5['speedup']}x below the asserted "
@@ -159,17 +156,15 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
             raise ValueError(f"scale tier ran only {s5['requests']} requests")
     if "disagg" in sc:
         dg = sc["disagg"]
-        for k in ("oracle_ok", "requests", "prompt_tokens", "gen_tokens",
-                  "chunk", "seed", "disagg", "speedup",
-                  "asserted_min_speedup"):
-            if k not in dg:
-                raise ValueError(f"disagg scenario missing {k}")
+        require_keys(dg, ("oracle_ok", "requests", "prompt_tokens",
+                          "gen_tokens", "chunk", "seed", "disagg", "speedup",
+                          "asserted_min_speedup"), "disagg scenario")
         if not dg["oracle_ok"]:
             raise ValueError("disagg race ran without a passing oracle leg")
         for side in ("seed", "disagg"):
-            for k in ("wall_s", "tokens_per_s", "decode_step_p99_s", "steps"):
-                if k not in dg[side]:
-                    raise ValueError(f"disagg.{side} missing {k}")
+            require_keys(dg[side], ("wall_s", "tokens_per_s",
+                                    "decode_step_p99_s", "steps"),
+                         f"disagg.{side}")
         if dg["speedup"] < dg["asserted_min_speedup"]:
             raise ValueError(
                 f"disagg token-throughput speedup {dg['speedup']}x below "
@@ -180,15 +175,42 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
                              "1.3x noise guard")
     if "observability" in sc:
         ob = sc["observability"]
-        for k in ("wall_untraced_s", "wall_traced_s", "overhead_frac",
-                  "materialize_wall_s", "spans", "scrapes"):
-            if k not in ob:
-                raise ValueError(f"observability scenario missing {k}")
+        require_keys(ob, ("wall_untraced_s", "wall_traced_s",
+                          "overhead_frac", "materialize_wall_s", "spans",
+                          "scrapes"), "observability scenario")
         # walls are host-measured (noise can push the min-of-pairs ratio
         # slightly negative); the asserted gate is the 10% ceiling
         if not -0.5 < ob["overhead_frac"] < 0.10:
             raise ValueError(
                 f"instrumentation overhead {ob['overhead_frac']} >= 10%")
+    if "contention" in sc:
+        ct = sc["contention"]
+        require_keys(ct, ("slots", "dedicated", "priority_on",
+                          "priority_off", "training", "p99_ratio",
+                          "makespan_ratio"), "contention scenario")
+        require_keys(ct["priority_on"], ("p99_s", "preempts", "leases",
+                                         "scale_denied"),
+                     "contention.priority_on")
+        require_keys(ct["priority_off"], ("p99_s", "preempts",
+                                          "scale_denied"),
+                     "contention.priority_off")
+        require_keys(ct["training"], ("contended_makespan_s",
+                                      "uncontended_makespan_s", "preempts",
+                                      "exactly_once"), "contention.training")
+        if ct["priority_on"]["preempts"] < 1:
+            raise ValueError("contention priority-on leg never preempted")
+        if ct["priority_on"]["scale_denied"] != 0:
+            raise ValueError("priority-on serving was starved by training")
+        if ct["priority_off"]["scale_denied"] < 1:
+            raise ValueError("priority-off leg never hit a capacity denial")
+        if ct["p99_ratio"] > 1.3:
+            raise ValueError(f"contended serving p99 {ct['p99_ratio']}x the "
+                             "dedicated baseline (> 1.3x gate)")
+        if ct["makespan_ratio"] > 2.0:
+            raise ValueError("contended training makespan "
+                             f"{ct['makespan_ratio']}x uncontended (> 2x)")
+        if not ct["training"]["exactly_once"]:
+            raise ValueError("preempted training attempts broke exactly-once")
 
 
 def run() -> list[dict]:
@@ -279,11 +301,12 @@ def run() -> list[dict]:
     rows.extend(_split_cost_scenario(preds["medium"], bench))
     rows.extend(_overload_shed_scenario(preds["small"], bench))
     rows.extend(_observability_scenario(preds["small"], bench))
+    rows.extend(_contention_scenario(preds["small"], bench))
     rows.extend(_scale_scenario(bench))
     rows.extend(_disagg_scenario(bench))
     validate_bench(bench, require=("fleet", "slo_failover", "split_cost",
-                                   "overload", "observability", "scale",
-                                   "disagg"))
+                                   "overload", "observability", "contention",
+                                   "scale", "disagg"))
     BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
     print(f"wrote {BENCH_JSON}", file=sys.stderr)
     return rows
@@ -695,6 +718,175 @@ def _observability_scenario(pred: Predictor, bench: dict) -> list[dict]:
     }]
 
 
+# -- contention tier (ISSUE 9): one CapacityMarket under both planes --------
+
+def _contention_pipeline():
+    """The training side of the contention race: a prep -> 4-branch tune
+    fan-out -> select -> train DAG with fixed sim_s durations (analytic,
+    so the makespan ratio is host-independent; the serving side keeps its
+    measured Predictor)."""
+    fns = {"prep": lambda: 1.0,
+           "tune": lambda i, p: {"lr": 0.01 * (1 + i), "loss": 1.0 / (1 + i)},
+           "select": lambda *rs: min(rs, key=lambda r: r["loss"]),
+           "train": lambda p, best: {"loss": best["loss"] / 2}}
+    pipe = Pipeline("contend-tune")
+    prep = pipe.step(fns["prep"], name="prep", cache=False)
+    branches = [pipe.step(fns["tune"], i, prep, name=f"tune{i}", cache=False)
+                for i in range(4)]
+    best = pipe.step(fns["select"], *branches, name="select", cache=False)
+    pipe.step(fns["train"], prep, best, name="train", cache=False)
+    spec = pipe.compile()
+    sims = {"prep": 0.3, "select": 0.05, "train": 1.5,
+            **{f"tune{i}": 1.2 for i in range(4)}}
+    for s in spec.steps:
+        s.sim_s = sims[s.name]
+    return spec
+
+
+def _contention_scenario(pred: Predictor, bench: dict) -> list[dict]:
+    """ISSUE 9 acceptance: training and serving colocated on ONE 4-slot
+    gcp CapacityMarket, raced four ways.
+
+      dedicated     the serving burst alone, no market -- the baseline the
+                    1.3x p99 gate compares against;
+      priority_on   training leases recorded first, then the same burst:
+                    elastic scale-ups preempt the youngest recorded
+                    training lease (spot semantics), so serving is never
+                    denied -- p99 must stay within 1.3x dedicated;
+      priority_off  same layout, serving_priority=False: the contended
+                    scale-up is DENIED (gateway:scale_denied capacity),
+                    zero preempts -- the counterfactual that shows the
+                    priority class doing the work;
+      training      the mirror image on a fresh market: the serving burst
+                    recorded first, then the orchestrator runs through the
+                    recorded rise-edges -- its youngest attempt is killed
+                    at the over-committing edge, re-enters RetryPolicy
+                    backoff (exactly-once asserted), and the contended
+                    makespan must stay <= 2x the uncontended run.  The
+                    budget planner reserves serving headroom on this leg
+                    (plan_budget), so training also waits rather than
+                    crowding the reserve.
+
+    Every leg ends with ``check_conservation()``: no cloud's committed
+    lease timeline ever exceeds its slots."""
+    slots = 4
+    t8 = pred.service_time(8)
+    prof = get_profile("gcp")
+    per_batch = prof.network_rtt_s + prof.lb_overhead_s + t8
+    n = 480
+    rate = 3.0 * 8 / per_batch           # 3x a single replica's ceiling
+
+    def run_serving(market):
+        log = EventLog()
+        gw = Gateway(log=log, shared_capacity=market)
+        gw.deploy("m", pred, prof,
+                  autoscaler=AutoscalerConfig(min_replicas=1,
+                                              max_replicas=slots,
+                                              target_queue=8,
+                                              scale_up_delay_s=0.01,
+                                              idle_window_s=np.inf),
+                  max_batch=8)
+        out = gw.run([TrafficSpec("m", n, arrival="poisson", rate=rate)],
+                     seed=0)
+        denied = sum(1 for e in log.named("gateway:scale_denied")
+                     if e["reason"] == "capacity")
+        return out, log, denied
+
+    def run_training(market, log=None):
+        orch = Orchestrator({"gcp": 3}, policy="makespan",
+                            log=log or EventLog(),
+                            retry=RetryPolicy(max_retries=3, backoff_s=0.3),
+                            shared_capacity=market)
+        return orch.execute(_contention_pipeline()), orch
+
+    # dedicated baseline: the burst with the cluster to itself
+    out_d, _, _ = run_serving(None)
+    p99_d = out_d.per_model["m"].p99
+
+    # priority on: recorded training, then the burst preempts its way up
+    mkt_on = CapacityMarket({"gcp": slots})
+    run_training(mkt_on)
+    out_on, log_on, denied_on = run_serving(mkt_on)
+    mkt_on.check_conservation()
+    p99_on = out_on.per_model["m"].p99
+    preempts_on = log_on.count("capacity:preempt")
+
+    # priority off: the same layout must deny the contended scale-up
+    mkt_off = CapacityMarket({"gcp": slots}, serving_priority=False)
+    run_training(mkt_off)
+    out_off, log_off, denied_off = run_serving(mkt_off)
+    mkt_off.check_conservation()
+    p99_off = out_off.per_model["m"].p99
+
+    # training leg: serving recorded first, orchestrator rides the edges
+    mkt_tr = CapacityMarket({"gcp": slots})
+    budget = mkt_tr.plan_budget({"gcp": 1.0}, work_s=0.3 + 4 * 1.2 + 1.55)
+    run_serving(mkt_tr)
+    tr_log = EventLog()
+    rec_c, _ = run_training(mkt_tr, log=tr_log)
+    mkt_tr.check_conservation()
+    rec_u, _ = run_training(None)        # uncontended makespan baseline
+    exactly_once = all(
+        r.status == "done"
+        and sum(1 for a in r.attempts if a["status"] == "ok") == 1
+        and all(a["status"] in ("ok", "outage", "preempted", "cancelled")
+                for a in r.attempts)
+        for r in rec_c.steps.values())
+    mk_ratio = rec_c.makespan_s / rec_u.makespan_s
+    p99_ratio = p99_on / p99_d
+
+    print(f"contention (4-slot gcp market, burst {n} reqs @ 3x one-replica "
+          "ceiling vs the tune fan-out):", file=sys.stderr)
+    print(f"  serving p99: dedicated {p99_d:.5f}s | priority-on {p99_on:.5f}s"
+          f" ({p99_ratio:.2f}x, {preempts_on} preempts) | priority-off "
+          f"{p99_off:.5f}s ({denied_off} denied)", file=sys.stderr)
+    print(f"  training makespan: uncontended {rec_u.makespan_s:.2f}s | "
+          f"contended {rec_c.makespan_s:.2f}s ({mk_ratio:.2f}x, "
+          f"{tr_log.count('capacity:preempt')} preempts, reserve "
+          f"{budget['reserve']})", file=sys.stderr)
+
+    # acceptance: priority keeps serving whole (preempt, never deny) within
+    # 1.3x dedicated; no-priority shows the denial; preempted training
+    # stays exactly-once and <= 2x uncontended
+    assert preempts_on >= 1 and denied_on == 0, (preempts_on, denied_on)
+    assert denied_off >= 1 and log_off.count("capacity:preempt") == 0
+    assert p99_ratio <= 1.3, (p99_on, p99_d)
+    assert rec_c.status == "succeeded" and exactly_once
+    assert mk_ratio <= 2.0, (rec_c.makespan_s, rec_u.makespan_s)
+
+    bench["scenarios"]["contention"] = {
+        "slots": slots,
+        "dedicated": {"p99_s": _round(p99_d, 6)},
+        "priority_on": {"p99_s": _round(p99_on, 6),
+                        "preempts": preempts_on,
+                        "leases": log_on.count("capacity:lease"),
+                        "scale_denied": denied_on,
+                        "sim_cost_usd": round(out_on.total_cost_usd, 8)},
+        "priority_off": {"p99_s": _round(p99_off, 6),
+                         "preempts": log_off.count("capacity:preempt"),
+                         "scale_denied": denied_off},
+        "training": {"contended_makespan_s": round(rec_c.makespan_s, 4),
+                     "uncontended_makespan_s": round(rec_u.makespan_s, 4),
+                     "preempts": tr_log.count("capacity:preempt"),
+                     "retries": tr_log.count("pipeline:retry"),
+                     "exactly_once": exactly_once,
+                     "budget": {"reserve": budget["reserve"],
+                                "training_slots": budget["training_slots"],
+                                "est_makespan_s":
+                                    round(budget["est_makespan_s"], 4)}},
+        "p99_ratio": round(p99_ratio, 4),
+        "makespan_ratio": round(mk_ratio, 4)}
+    return [{
+        "name": "gateway_contention_race",
+        "us_per_call": p99_on * 1e6,
+        "derived": f"p99_ratio={p99_ratio:.3f};"
+                   f"makespan_ratio={mk_ratio:.3f};"
+                   f"preempts_on={preempts_on};denied_off={denied_off};"
+                   f"training_preempts={tr_log.count('capacity:preempt')};"
+                   f"exactly_once={exactly_once}",
+    }]
+
+
 # -- scale tier (ISSUE 7): simulator throughput, not model latency ----------
 
 # bench-local fifth cloud so the fleet spans five providers without
@@ -986,30 +1178,37 @@ def _disagg_scenario(bench: dict, *, smoke: bool = False) -> list[dict]:
 
 def smoke() -> None:
     """CI bench-smoke: run the overload scenario (with its burn-rate
-    telemetry leg), the instrumentation-overhead race, the reduced
-    scale tier (engine oracle + >=10x vector-over-scalar on a smaller
-    request count) and the reduced disagg tier (output oracle + >=1.3x
-    chunked-prefill token throughput), then validate both the freshly
-    produced record and (when present) the committed BENCH_gateway.json
-    against the schema -- including the shed-rate fields, the
-    alert-before-migrate ordering, the <10% overhead gate and the
-    recorded scale / disagg speedups."""
+    telemetry leg), the instrumentation-overhead race, the contention
+    race (ISSUE 9: training + serving burst through one CapacityMarket,
+    priority on vs off), the reduced scale tier (engine oracle + >=10x
+    vector-over-scalar on a smaller request count) and the reduced disagg
+    tier (output oracle + >=1.3x chunked-prefill token throughput), then
+    validate both the freshly produced record and (when present) the
+    committed BENCH_gateway.json against the schema -- including the
+    shed-rate fields, the alert-before-migrate ordering, the <10%
+    overhead gate, the contention ratios and the recorded scale / disagg
+    speedups."""
     pred = _make_predictor("small", WIDTHS["small"])
     bench: dict = {"schema": BENCH_SCHEMA, "scenarios": {}}
     _overload_shed_scenario(pred, bench)
     _observability_scenario(pred, bench)
+    _contention_scenario(pred, bench)
     _scale_scenario(bench, smoke=True)
     _disagg_scenario(bench, smoke=True)
-    validate_bench(bench, require=("overload", "observability", "scale",
-                                   "disagg"))
+    validate_bench(bench, require=("overload", "observability", "contention",
+                                   "scale", "disagg"))
     if BENCH_JSON.exists():
         validate_bench(json.loads(BENCH_JSON.read_text()),
                        require=("fleet", "slo_failover", "split_cost",
-                                "overload", "observability", "scale",
-                                "disagg"))
+                                "overload", "observability", "contention",
+                                "scale", "disagg"))
         print(f"validated {BENCH_JSON}", file=sys.stderr)
     print("overload race:",
           json.dumps(bench["scenarios"]["overload"]["race"]),
+          file=sys.stderr)
+    ct = bench["scenarios"]["contention"]
+    print("contention:", json.dumps({"p99_ratio": ct["p99_ratio"],
+                                     "makespan_ratio": ct["makespan_ratio"]}),
           file=sys.stderr)
 
 

@@ -38,6 +38,11 @@ import sys
 import jax
 import jax.numpy as jnp
 
+try:
+    from ._schema import check_header, require_keys
+except ImportError:                      # run directly as a script (CI)
+    from _schema import check_header, require_keys
+
 from repro.checkpoint.store import ArtifactStore
 from repro.clouds.profiles import get_profile
 from repro.core.pipeline import Pipeline
@@ -52,29 +57,25 @@ from repro.telemetry.trace import Tracer
 from repro.tuning import katib
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_pipelines.json"
-BENCH_SCHEMA = 2
+# schema 3: header validation moved onto the shared benchmarks/_schema.py
+# helper (ISSUE 9); schema 2 added the race/recurring orchestrator tiers
+BENCH_SCHEMA = 3
 N_BRANCHES = 6
 
 
 def validate_bench(bench: dict, require: tuple = ()) -> None:
-    """BENCH_pipelines.json schema check (the CI bench-smoke gate)."""
-    if bench.get("schema") != BENCH_SCHEMA:
-        raise ValueError(f"schema {bench.get('schema')} != {BENCH_SCHEMA}")
-    sc = bench.get("scenarios", {})
-    missing = [name for name in require if name not in sc]
-    if missing:
-        raise ValueError(f"missing scenarios: {missing}")
+    """BENCH_pipelines.json schema check (the CI bench-smoke gate); the
+    header/required-scenario machinery is shared with the gateway suite
+    via ``_schema``."""
+    sc = check_header(bench, BENCH_SCHEMA, require)
     for prof, rec in sc.get("stage_timing", {}).items():
-        for k in ("katib_s", "tfjob_s", "serving_s", "total_s"):
-            if k not in rec:
-                raise ValueError(f"stage_timing {prof} missing {k}")
+        require_keys(rec, ("katib_s", "tfjob_s", "serving_s", "total_s"),
+                     f"stage_timing {prof}")
     if "race" in sc:
         r = sc["race"]
-        for k in ("serial_s", "orchestrated_s", "speedup", "retries",
-                  "exactly_once", "sim_cost_usd", "branches",
-                  "critical_path"):
-            if k not in r:
-                raise ValueError(f"race missing {k}")
+        require_keys(r, ("serial_s", "orchestrated_s", "speedup", "retries",
+                         "exactly_once", "sim_cost_usd", "branches",
+                         "critical_path"), "race")
         if r["speedup"] < 1.5:
             raise ValueError(f"race speedup {r['speedup']} < 1.5")
         if r["retries"] < 1 or not r["exactly_once"]:
@@ -83,16 +84,13 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
         if not cp or cp[-1]["step"] != "train":
             raise ValueError(f"race critical path must end at train: {cp}")
         for row in cp:
-            for k in ("step", "cloud", "total_s", "control_s",
-                      "transfer_s", "compute_s", "wait_s"):
-                if k not in row:
-                    raise ValueError(f"critical path row missing {k}")
+            require_keys(row, ("step", "cloud", "total_s", "control_s",
+                               "transfer_s", "compute_s", "wait_s"),
+                         "critical path row")
     if "recurring" in sc:
         r = sc["recurring"]
-        for k in ("runs", "first_run_s", "cached_run_s", "cache_hits",
-                  "sim_cost_usd"):
-            if k not in r:
-                raise ValueError(f"recurring missing {k}")
+        require_keys(r, ("runs", "first_run_s", "cached_run_s", "cache_hits",
+                         "sim_cost_usd"), "recurring")
         if r["cache_hits"] < 1 or r["cached_run_s"] > r["first_run_s"]:
             raise ValueError(f"recurring run did not cache: {r}")
 

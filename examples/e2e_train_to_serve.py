@@ -16,6 +16,12 @@ trace: every served request's span links back to the deploy step that
 produced the model, and the analyzer derives the run critical path and
 the slowest-request stage breakdown from the spans alone.
 
+One CapacityMarket is ALSO shared by both planes (ISSUE 9): training and
+serving lease the same per-cloud slots, so the burst's gcp floor finds
+the recorded training leases in its way and preempts the youngest (spot
+semantics, logged capacity:preempt) -- the colocated-cluster economics
+the paper's single-cluster deployments imply.
+
 Per DESIGN.md §1: stage compute and backend service times are MEASURED on
 this host; startup / RTT / transfer / dollar figures derive from the
 CloudProfile constants and are simulation outputs.
@@ -27,6 +33,7 @@ import json
 import jax
 import jax.numpy as jnp
 
+from repro.clouds.capacity import CapacityMarket
 from repro.clouds.profiles import get_profile
 from repro.core.pipeline import Pipeline
 from repro.core.trainjob import SupervisedTrainJob
@@ -90,10 +97,15 @@ def main():
     log = EventLog()
     tracer = Tracer()                    # ONE tracer spans train AND serve
     registry = MetricsRegistry()
-    gw = Gateway(log=log, tracer=tracer, metrics=registry)
+    # ONE capacity market under both planes: gcp is tight (2 slots, the
+    # same ceiling the placement pin models), so the serving floor must
+    # preempt the recorded training leases to come up
+    market = CapacityMarket({"gcp": 2, "ibm": 4})
+    gw = Gateway(log=log, tracer=tracer, metrics=registry,
+                 shared_capacity=market)
     # cost policy: tuning + training land on the CHEAPEST simulated cloud
     orch = Orchestrator({"gcp": 2, "ibm": 2}, policy="cost", log=log,
-                        tracer=tracer)
+                        tracer=tracer, shared_capacity=market)
     runs = PipelineRuns(orch)
     recs = runs.recurring(spec, every_s=300.0, runs=2, gateway=gw)
 
@@ -148,6 +160,14 @@ def main():
     # connected component -- walking from the second recurring run's root
     # (its deploy step produced the served model) reaches every served
     # request span through the deploy-step link
+    # ISSUE 9 acceptance: the shared market actually contended -- the
+    # serving floor preempted at least one recorded training lease on the
+    # tight cloud, and no cloud's committed timeline was over-committed
+    assert log.count("capacity:preempt") >= 1
+    assert log.count("capacity:lease") >= 1
+    market.check_conservation()
+    print(f"capacity market: {log.count('capacity:lease')} leases, "
+          f"{log.count('capacity:preempt')} preempt(s) during the burst")
     assert not validate_trace(tracer)
     linked = tracer.reachable(recs[1].span_id)
     request_roots = [s for s in tracer.named("gateway.request")

@@ -110,6 +110,10 @@ class _StepState:
         self.pending: Optional[dict] = None   # in-flight attempt bookkeeping
         self.span = None                 # pipeline.step span (tracer only)
         self.attempt_span = None         # current pipeline.attempt span
+        # market mode only (shared_capacity): live / speculative-backup
+        # attempt info dicts -- the preemption victim registry
+        self.live: Optional[dict] = None
+        self.backup: Optional[dict] = None
 
 
 class Orchestrator:
@@ -125,7 +129,7 @@ class Orchestrator:
                  retry: Optional[RetryPolicy] = None,
                  cache: Optional[ArtifactCache] = None,
                  log: Optional[EventLog] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, shared_capacity=None):
         if policy not in ("cost", "makespan"):
             raise ValueError(f"unknown policy {policy!r}")
         self.pools: dict[str, _WorkerPool] = {}
@@ -150,6 +154,12 @@ class Orchestrator:
         self.tracer = tracer
         self.metrics = metrics
         self._run_span = None            # open pipeline.run span (execute)
+        # unified capacity market (clouds/capacity.py, ISSUE 9): when a
+        # CapacityMarket is shared with the Gateway, every training attempt
+        # takes a spot-style preemptible lease on its cloud's ledger and
+        # recorded serving occupancy contends with scheduling.  None (the
+        # default) keeps every pre-ISSUE-9 code path bit-identical.
+        self.market = shared_capacity
 
     # -- outage windows ------------------------------------------------------
     @staticmethod
@@ -259,6 +269,17 @@ class Orchestrator:
         for cloud, ws in windows.items():
             for _, end in ws:            # recovery edges re-arm scheduling
                 events.push(end, "recover", cloud)
+        cap_woken: set = set()           # dedup for ledger wake-up events
+        if self.market is not None:
+            # recorded serving rise-edges from an earlier gateway run on
+            # the shared market: at each edge the cloud may over-commit,
+            # killing the youngest training lease (spot semantics)
+            for cloud in self.pools:
+                led = self.market.ledger(cloud)
+                if led is not None:
+                    for edge in led.serving_edges(lo=float(t0)):
+                        events.push(edge, "capacity", cloud)
+        self._worker_gauges()
 
         t_last = float(t0)
         wall0 = time.perf_counter()
@@ -293,10 +314,12 @@ class Orchestrator:
                 pend["entry"].hits += 1
             else:
                 self.pools[pend["cloud"]].busy -= 1
-                rec.attempts[-1]["end_s"] = t
-                rec.attempts[-1]["status"] = "ok"
-                rec.attempts[-1]["cost_usd"] = pend["cost"]
+                att = rec.attempts[pend.get("att_idx", -1)]
+                att["end_s"] = t
+                att["status"] = "ok"
+                att["cost_usd"] = pend["cost"]
                 rec.cost_usd += pend["cost"]
+                self._worker_gauges()
                 if pend["key"] is not None:
                     s.entry = self.cache.put(pend["key"], s.output,
                                              names[i], pend["cloud"])
@@ -366,6 +389,90 @@ class Orchestrator:
                                 reason=reason)
                 st[i].record.span_id = st[i].span.span_id
             cascade_skip(i, t)
+
+        def kill_attempt(i: int, info: dict, t: float, status: str) -> None:
+            """Market mode: close a live attempt early (preempted by a
+            serving rise-edge, or cancelled as the losing side of a
+            speculative pair).  The fn already ran exactly once; only the
+            simulated occupancy is torn down."""
+            nonlocal t_last
+            s = st[i]
+            info["dead"] = True          # stale done/abort events no-op
+            self.pools[info["cloud"]].busy -= 1
+            if info.get("lease") is not None:
+                self.market.ledger(info["cloud"]).release(
+                    info["lease"], t, status=status)
+            cost = (t - info["start"]) \
+                * self.pools[info["cloud"]].profile.cost_per_s \
+                + info["tr_usd"]
+            att = s.record.attempts[info["att_idx"]]
+            att["end_s"] = t
+            att["status"] = status
+            att["cost_usd"] = cost
+            s.record.cost_usd += cost
+            t_last = max(t_last, t)
+            if self.tracer is not None:
+                for tsp in info.get("spans", ()):
+                    if tsp.t1 is None or tsp.t1 > t:
+                        self.tracer.end(tsp, t, truncated=True)
+                asp = info.get("att_span")
+                if asp is not None and asp.t1 is None:
+                    self.tracer.end(asp, t, status=status)
+            if s.live is info:
+                s.live = None
+            if s.backup is info:
+                s.backup = None
+            if s.pending is info:
+                s.pending = None         # the scheduled abort is void
+            self._worker_gauges()
+
+        def preempt_training(cloud: str, t: float) -> bool:
+            """Kill the youngest live training attempt on ``cloud`` (max
+            start time, ties by attempt/step order).  The killed attempt
+            re-enters the normal RetryPolicy backoff path -- unless its
+            speculative twin is still running, which then IS the retry."""
+            cands = []
+            for j, s2 in enumerate(st):
+                for info in (s2.live, s2.backup):
+                    if info is not None and not info.get("dead") \
+                            and info["cloud"] == cloud:
+                        cands.append((info["start"], info["att_idx"], j,
+                                      info))
+            if not cands:
+                return False
+            _, _, j, info = max(cands, key=lambda x: x[:3])
+            kill_attempt(j, info, t, "preempted")
+            s2 = st[j]
+            self.log.record("capacity:preempt", 0.0, step=names[j],
+                            cloud=cloud, attempt=info["att_idx"] + 1,
+                            t_sim=round(t, 6))
+            if s2.live is None and s2.backup is not None:
+                s2.live = s2.backup      # surviving twin carries on
+                s2.backup = None
+            if s2.live is not None:
+                return True
+            n_att = len(s2.record.attempts)
+            if n_att > self.retry.max_retries:
+                perm_fail(j, t, "preempted")
+            else:
+                nxt = t + self.retry.delay_s(n_att - 1)
+                s2.status = "retry_wait"
+                self.log.record("pipeline:retry", 0.0, step=names[j],
+                                cloud=cloud, attempt=n_att,
+                                t_sim=round(t, 6), next_s=round(nxt, 6),
+                                reason="preempt")
+                events.push(nxt, "ready", j)
+            return True
+
+        def market_edges(t: float) -> None:
+            """A recorded serving rise-edge may over-commit a cloud whose
+            slots are partly held by open training leases: preempt the
+            youngest until the committed timeline fits again."""
+            for cloud in sorted(self.market.ledgers):
+                led = self.market.ledgers[cloud]
+                while led.used(t) > led.slots:
+                    if not preempt_training(cloud, t):
+                        break            # nothing left to evict here
 
         def schedule(t: float) -> None:
             for i in sorted(ready):
@@ -443,6 +550,23 @@ class Orchestrator:
                          if p.free() > 0                    # cache hit would
                          and not self._down_at(windows, c, t)
                          and (step.pin is None or step.pin == c)]
+                if self.market is not None and cands:
+                    # the ledger is the source of truth: a cloud whose
+                    # slots are taken (serving occupancy + reserve) admits
+                    # no new training lease at t -- the step waits for the
+                    # next recorded lease end (wake-up event)
+                    open_ = [p for p in cands
+                             if self.market.training_free(
+                                 p.profile.name, t) > 0]
+                    if not open_:
+                        for p in cands:
+                            led = self.market.ledger(p.profile.name)
+                            nxt = (led.next_release_after(t)
+                                   if led is not None else None)
+                            if nxt is not None and nxt not in cap_woken:
+                                cap_woken.add(nxt)
+                                events.push(nxt, "recover", p.profile.name)
+                    cands = open_
                 if not cands:
                     continue             # stays ready; a done/abort/recover
                 ready.discard(i)         # event re-runs this pass
@@ -469,21 +593,60 @@ class Orchestrator:
                         ready.add(data)
                 elif kind == "recover":
                     pass                 # scheduling pass below re-checks
+                elif kind == "capacity":
+                    market_edges(t)      # serving rise-edge on `data` cloud
                 elif kind == "done":
                     i, pend = data
+                    if self.market is not None and not pend["cached"]:
+                        info = pend.get("info")
+                        if info is not None:
+                            if info.get("dead"):
+                                continue  # preempted/cancelled: stale done
+                            s2 = st[i]
+                            if info.get("lease") is not None:
+                                self.market.ledger(info["cloud"]).release(
+                                    info["lease"], t)
+                            info["dead"] = True
+                            loser = (s2.backup if s2.live is info
+                                     else s2.live)
+                            if s2.live is info:
+                                s2.live = None
+                            else:
+                                s2.backup = None
+                            if loser is not None and not loser.get("dead"):
+                                # the speculative twin lost the race:
+                                # cancel it through the ledger
+                                kill_attempt(i, loser, t, "cancelled")
                     finish(i, t, pend)
                 else:                    # "abort": outage killed the attempt
                     i = data
                     s = st[i]
                     pend = s.pending
+                    if self.market is not None \
+                            and (pend is None or pend.get("dead")):
+                        continue         # already torn down via the market
                     s.pending = None
                     self.pools[pend["cloud"]].busy -= 1
+                    if self.market is not None:
+                        pend["dead"] = True
+                        if pend.get("lease") is not None:
+                            # with a live speculative twin the outage ends
+                            # the race: the twin is promoted below and the
+                            # primary is the cancelled loser in the audit
+                            self.market.ledger(pend["cloud"]).release(
+                                pend["lease"], t,
+                                status=("cancelled" if s.backup is not None
+                                        else "released"))
+                        if s.live is pend:
+                            s.live = None
+                    self._worker_gauges()
                     cost = (t - pend["start"]) \
                         * self.pools[pend["cloud"]].profile.cost_per_s \
                         + pend["tr_usd"]
-                    s.record.attempts[-1]["end_s"] = t
-                    s.record.attempts[-1]["status"] = "outage"
-                    s.record.attempts[-1]["cost_usd"] = cost
+                    att = s.record.attempts[pend.get("att_idx", -1)]
+                    att["end_s"] = t
+                    att["status"] = "outage"
+                    att["cost_usd"] = cost
                     s.record.cost_usd += cost
                     t_last = max(t_last, t)
                     if self.tracer is not None:
@@ -492,12 +655,14 @@ class Orchestrator:
                         for tsp in pend.get("spans", ()):
                             if tsp.t1 is None or tsp.t1 > t:
                                 self.tracer.end(tsp, t, truncated=True)
-                        if s.attempt_span is not None \
-                                and s.attempt_span.t1 is None:
-                            self.tracer.end(s.attempt_span, t,
-                                            status="outage")
+                        asp = pend.get("att_span", s.attempt_span)
+                        if asp is not None and asp.t1 is None:
+                            self.tracer.end(asp, t, status="outage")
                     n_att = len(s.record.attempts)
-                    if n_att > self.retry.max_retries:
+                    if self.market is not None and s.backup is not None:
+                        s.live = s.backup   # the speculative backup IS the
+                        s.backup = None     # retry: no backoff re-entry
+                    elif n_att > self.retry.max_retries:
                         perm_fail(i, t, "outage")
                     else:
                         nxt = t + self.retry.delay_s(n_att - 1)
@@ -618,6 +783,15 @@ class Orchestrator:
                                   "end_s": t_end, "status": "ok",
                                   "cost_usd": 0.0})
         pool.busy += 1
+        lease = None
+        if self.market is not None:
+            led = self.market.ledger(cloud)
+            if led is not None:
+                lease = led.lease("training", f"{spec.name}:{names}", t)
+                self.log.record("capacity:lease", 0.0, cloud=cloud,
+                                kind="training", step=names,
+                                t_sim=round(t, 6))
+        self._worker_gauges()
         self.log.record("pipeline:schedule", 0.0, step=names, cloud=cloud,
                         attempt=len(s.record.attempts), t_sim=round(t, 6))
         att_span = None
@@ -642,17 +816,131 @@ class Orchestrator:
                                         bytes=int(nb))
                 self.tracer.end(tsp, t + t_tr)
                 tspans.append(tsp)
+        att_idx = len(s.record.attempts) - 1
+        info = None
+        if self.market is not None:
+            info = {"cloud": cloud, "start": t, "tr_usd": tr_usd,
+                    "spans": tspans, "lease": lease, "att_idx": att_idx,
+                    "att_span": att_span, "dead": False}
+            s.live = info
         t_f = self._fails_at(windows, cloud, t, t_end)
         if t_f is not None:
-            s.pending = {"cloud": cloud, "start": t, "tr_usd": tr_usd,
-                         "spans": tspans}
+            s.pending = info if info is not None else \
+                {"cloud": cloud, "start": t, "tr_usd": tr_usd,
+                 "spans": tspans, "att_idx": att_idx}
             events.push(t_f, "abort", i)
+            if info is not None:
+                # the outage window threatens this attempt: hedge with a
+                # speculative backup on a second cloud (PR 5's carried
+                # candidate) -- the loser is cancelled via the ledger
+                self._speculate(spec, st, i, t, key, windows, events)
             return
         cost = dur * pool.profile.cost_per_s + tr_usd
+        pend = {"cloud": cloud, "cached": False, "dur": dur, "cost": cost,
+                "key": key, "transfers": transfers, "span": att_span,
+                "att_idx": att_idx}
+        if info is not None:
+            pend["info"] = info
+        events.push(t_end, "done", (i, pend))
+
+    def _worker_gauges(self) -> None:
+        """Expose cluster occupancy to the metrics plane (ISSUE 9): the
+        gauges are refreshed on every busy/free transition and frozen by
+        whatever scrape runs next (e.g. a shared registry's gateway
+        scrape loop)."""
+        if self.metrics is None:
+            return
+        for c in sorted(self.pools):
+            p = self.pools[c]
+            self.metrics.gauge("pipeline_workers_busy", cloud=c).set(p.busy)
+            self.metrics.gauge("pipeline_workers_free",
+                               cloud=c).set(p.free())
+
+    def _speculate(self, spec, st, i: int, t: float, key, windows,
+                   events: EventHeap) -> None:
+        """Market mode: the just-started attempt is doomed by a known
+        outage window.  Launch a backup attempt of the same step on a
+        second cloud that (a) has a free worker and a free ledger slot and
+        (b) survives its own duration -- the first attempt to complete
+        wins and the loser is cancelled through the ledger.  The fn is
+        NOT re-run (exactly once); the backup replays the measured
+        compute under the alternate cloud's control-plane constants."""
+        step = spec.steps[i]
+        s = st[i]
+        prim = s.live["cloud"]
+        cands = []
+        for c, p in self.pools.items():
+            if c == prim or p.free() <= 0 \
+                    or self._down_at(windows, c, t) \
+                    or (step.pin is not None and step.pin != c) \
+                    or self.market.training_free(c, t) <= 0:
+                continue
+            transfers = self._plan_inputs(st, step, c, windows, t)
+            tr_s = sum(x[2] for x in transfers)
+            dur = (p.profile.startup_s + p.profile.network_rtt_s + tr_s
+                   + s.compute_s + s.extra_s)
+            if self._fails_at(windows, c, t, t + dur) is not None:
+                continue                 # a doomed backup hedges nothing
+            cands.append((self._rank(st, step, p, windows, t), c, p,
+                          transfers, tr_s, dur))
+        if not cands:
+            return
+        _, cloud, pool, transfers, tr_s, dur = min(cands,
+                                                   key=lambda x: x[0])
+        tr_usd = sum(x[3] for x in transfers)
+        t_end = t + dur
+        led = self.market.ledger(cloud)
+        lease = None
+        if led is not None:
+            lease = led.lease("training", f"{spec.name}:{step.name}", t)
+            if lease is None:
+                return                   # lost the slot; no hedge
+            self.log.record("capacity:lease", 0.0, cloud=cloud,
+                            kind="training", step=step.name,
+                            t_sim=round(t, 6))
+        pool.busy += 1
+        s.record.transfer_s += tr_s
+        s.record.transfer_cost_usd += tr_usd
+        s.record.attempts.append({"cloud": cloud, "start_s": t,
+                                  "end_s": t_end, "status": "ok",
+                                  "cost_usd": 0.0})
+        att_idx = len(s.record.attempts) - 1
+        self._worker_gauges()
+        self.log.record("capacity:speculate", 0.0, step=step.name,
+                        cloud=cloud, primary=prim, attempt=att_idx + 1,
+                        t_sim=round(t, 6))
+        self.log.record("pipeline:schedule", 0.0, step=step.name,
+                        cloud=cloud, attempt=att_idx + 1,
+                        t_sim=round(t, 6))
+        att_span = None
+        tspans = []
+        if self.tracer is not None:
+            att_span = self.tracer.start(
+                "pipeline.attempt", t, parent=s.span, cloud=cloud,
+                attempt=att_idx + 1, speculative=True,
+                control_s=(pool.profile.startup_s
+                           + pool.profile.network_rtt_s + s.extra_s),
+                transfer_s=tr_s, compute_s=s.compute_s)
+        for d, src, t_tr, usd, nb in transfers:
+            self.log.record("pipeline:transfer", t_tr, step=step.name,
+                            src=src, dst=cloud, bytes=int(nb),
+                            cost=round(usd, 10), t_sim=round(t, 6))
+            if self.tracer is not None:
+                tsp = self.tracer.start("pipeline.transfer", t,
+                                        parent=att_span, src=src,
+                                        dst=cloud, bytes=int(nb))
+                self.tracer.end(tsp, t + t_tr)
+                tspans.append(tsp)
+        info = {"cloud": cloud, "start": t, "tr_usd": tr_usd,
+                "spans": tspans, "lease": lease, "att_idx": att_idx,
+                "att_span": att_span, "dead": False}
+        s.backup = info
+        cost = dur * pool.profile.cost_per_s + tr_usd
         events.push(t_end, "done",
-                    (i, {"cloud": cloud, "cached": False,
-                         "dur": dur, "cost": cost, "key": key,
-                         "transfers": transfers, "span": att_span}))
+                    (i, {"cloud": cloud, "cached": False, "dur": dur,
+                         "cost": cost, "key": key, "transfers": transfers,
+                         "span": att_span, "att_idx": att_idx,
+                         "info": info}))
 
     def _plan_handoff(self, step, s: _StepState) -> bool:
         """Deploy planning: size a placement from the backend's measured
@@ -666,7 +954,19 @@ class Orchestrator:
         backend = s.output
         svc = backend.service_time(ds.max_batch) / ds.max_batch
         rate = ds.rate if ds.rate is not None else ds.load_erlangs / svc
-        plan = plan_placement([ModelDemand(ds.model, rate, svc)], ds.clouds,
+        clouds = ds.clouds
+        if self.market is not None:
+            # placement headroom reads the ledger: a cloud can never host
+            # more replicas than its market slots (serving holds priority,
+            # so the full slot count -- not slots minus reserve -- bounds)
+            clouds = [
+                cc if self.market.ledger(cc.profile.name) is None
+                else dataclasses.replace(
+                    cc, max_replicas=min(
+                        cc.max_replicas,
+                        self.market.ledger(cc.profile.name).slots))
+                for cc in ds.clouds]
+        plan = plan_placement([ModelDemand(ds.model, rate, svc)], clouds,
                               objective=ds.objective, split=ds.split)
         a = plan.assignments[0]
         if not plan.feasible or not a.shares:

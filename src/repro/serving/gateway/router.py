@@ -687,6 +687,10 @@ class _Pool:
         # unmet demand the autoscaler must see as queue depth, so shedding
         # triggers scale-up instead of masking the overload
         self.kind = "both"               # disagg stage(s) this pool serves
+        self.handoff_load_s: Optional[float] = None  # warm-handoff cold
+        # cost for relaunched replicas (market mode only; None keeps the
+        # profile.model_load_s path bit-identical)
+        self.handoff_n = 0               # relaunched replicas still owed it
         self.kv_total = 0                # KV block budget (0 = unaccounted)
         self.kv_used = 0                 # blocks held by in-flight batches
         self.kv_resident: dict = {}      # version -> blocks currently held
@@ -880,9 +884,20 @@ class Gateway:
                  metrics: Optional[MetricsRegistry] = None,
                  slo_burn: Optional[BurnRateConfig] = None,
                  scrape_every_s: Optional[float] = None,
-                 record_batches: bool = False):
+                 record_batches: bool = False,
+                 shared_capacity=None):
         self.deployments: dict[str, Deployment] = {}
         self.capacity = dict(capacity or {})
+        # unified capacity market (clouds/capacity.py, ISSUE 9): when a
+        # CapacityMarket is shared with the Orchestrator, every replica
+        # holds a serving lease on its cloud's ledger, scale-ups preempt
+        # the youngest training lease (serving priority) and relaunches
+        # may pay a state transfer instead of a cold model load.  None
+        # (the default) keeps every pre-ISSUE-9 code path bit-identical.
+        self.market = shared_capacity
+        if self.market is not None:
+            for c, led in self.market.ledgers.items():
+                self.capacity.setdefault(c, led.slots)
         self.log = log or EventLog()
         self.replan = replan
         self.routing = routing or RoutingConfig()
@@ -901,6 +916,7 @@ class Gateway:
         self.final_kv: dict = {}         # disagg models: post-run kv_used
         self.run_stats: dict = {}        # last run's engine + throughput
         self._run_span = None            # open gateway.run span during run()
+        self._leases: dict = {}          # (model, cloud) -> serving Leases
 
     def deploy(self, name: str, backend, profile: Optional[CloudProfile] = None,
                *, split: Optional[dict] = None, autoscaler=None,
@@ -1005,6 +1021,7 @@ class Gateway:
         self.batch_log = []              # audit trails cover ONE run
         self.usage_trace = []
         self.final_weights = {}
+        self._leases = {}                # (model, cloud) -> open Leases
         if self.burn is not None:
             self.burn.reset()            # windows are run-scoped
         if self.tracer is not None:
@@ -1073,6 +1090,11 @@ class Gateway:
                     pool.replicas[s.next_rid] = _Replica(
                         s.next_rid, warm=True)
                     s.next_rid += 1
+                    if self.market is not None:
+                        # floors are the contractual serving minimum: they
+                        # always win the slot, preempting recorded training
+                        # leases even with serving_priority off
+                        self._market_lease(m, c, 0.0, force=True)
             s.trace.append((0.0, s.total_pool()))
             s.svc1 = dep.backend.service_time(1)
             # amortized per-request service estimate for the routing /
@@ -1155,6 +1177,14 @@ class Gateway:
             totals[m] = (float((s.arr[keep] + s.lat[keep]).max())
                          if keep.any() else 0.0)
             makespan = max(makespan, totals[m])
+        if self.market is not None:
+            # surviving replicas occupied their slots through the fleet's
+            # last completion: close the recorded serving intervals there
+            for (model, cloud), leases in sorted(self._leases.items()):
+                led = self.market.ledger(cloud)
+                for lease in leases:
+                    if lease.status == "active":
+                        led.release(lease, makespan)
         self.log.record("gateway:run", makespan, models=sorted(by_model),
                         n=n_req, wall_s=_wall_s)
         if self.tracer is not None:
@@ -1299,6 +1329,11 @@ class Gateway:
         guarantees admission and burn monitoring are off."""
         arr = s.arr
         now = float(arr[s.cursor])
+        if self.market is not None:
+            # market mode: scale-up decisions preempt training leases, so
+            # every timestep is a potential ledger mutation -- force the
+            # per-request path (same rule as disagg below)
+            return now
         if s.dep.disagg is not None:
             # per-request KV accounting / cache shed / stage routing: every
             # arrival is a real decision, so the span skip never applies --
@@ -1975,6 +2010,11 @@ class Gateway:
         cold = 0.0
         if not r.warm:
             cold = pool.profile.model_load_s
+            if pool.handoff_load_s is not None and pool.handoff_n > 0:
+                # warm handoff (market mode): this relaunched replica got
+                # its state over the interconnect, not a cold model load
+                cold = pool.handoff_load_s
+                pool.handoff_n -= 1
             r.warm = True
             s.cold_starts += 1
             self.log.record("gateway:cold_start", cold, model=dep.name,
@@ -2232,6 +2272,11 @@ class Gateway:
                 moved += old_size[c]
                 for r in pool.replicas.values():
                     pool.replica_seconds += max(t - r.created_s, 0.0)
+                if self.market is not None:
+                    # the pods are gone: give every slot back at once
+                    self._market_release(dep.name, c, t,
+                                         len(pool.replicas)
+                                         + pool.scheduled_up)
                 pool.replicas.clear()
                 pool.generation += 1     # stale "up" events are dropped
                 pool.scheduled_up = 0
@@ -2241,6 +2286,10 @@ class Gateway:
                   and (pool.replicas or pool.scheduled_up)):
                 moved += old_size[c]
                 pool.generation += 1
+                if self.market is not None and pool.scheduled_up:
+                    # invalidated pending launches free their slots now;
+                    # live replicas release theirs as they retire
+                    self._market_release(dep.name, c, t, pool.scheduled_up)
                 pool.scheduled_up = 0
                 for r in [x for x in pool.replicas.values() if not x.busy]:
                     self._retire(s, pool, r, t, st)
@@ -2283,7 +2332,30 @@ class Gateway:
             # count them against the destination (they retire right after)
             n = dep.autoscaler.relaunch_pool(
                 share, pool.queue_len(),
-                self._pool_headroom(st, s, pool, assume_live=True))
+                self._pool_headroom(st, s, pool, assume_live=True, t=t))
+            if n > 0 and self.market is not None \
+                    and self.market.state_bytes > 0:
+                # replica warm handoff: the relaunched cohort migrates the
+                # model state from the largest shrinking pool over the
+                # interconnect instead of paying a cold model load --
+                # whichever is cheaper (priced like artifact transfers)
+                srcs = [(old_size[c2], c2) for c2, p2 in s.pools.items()
+                        if c2 != c and old_size[c2] > 0
+                        and old_live.get(c2, 0.0) > 0]
+                if srcs:
+                    from ...pipelines.artifacts import transfer_time_s
+                    src_prof = s.pools[max(srcs)[1]].profile
+                    tr = transfer_time_s(src_prof, pool.profile,
+                                         self.market.state_bytes)
+                    if tr < pool.profile.model_load_s:
+                        pool.handoff_load_s = tr
+                        pool.handoff_n = n
+                        self.log.record(
+                            "capacity:handoff", 0.0, model=dep.name,
+                            src=src_prof.name, dst=c, t_sim=round(t, 6),
+                            replicas=n, transfer_s=round(tr, 6),
+                            saved_s=round(pool.profile.model_load_s - tr,
+                                          6))
             for i in range(n):
                 self._launch(s, pool, t, events, st, down,
                              from_zero=(i == 0 and pool.queue_len() > 0),
@@ -2361,7 +2433,7 @@ class Gateway:
             blocked = [
                 (c, p) for c, p in live
                 if self._pool_overloaded(s, p)
-                and self._pool_headroom(st, s, p, down) <= 0]
+                and self._pool_headroom(st, s, p, down, t=t) <= 0]
             miss = (s.win_n >= cfg.min_window_n
                     and s.win_miss / s.win_n > cfg.max_miss_rate)
             # shedding is an overload signal, never a mask: a window shed
@@ -2413,7 +2485,8 @@ class Gateway:
                     views.append(    # ping-pongs the backlog, no relief
                         PoolView(c, p.profile.cost_per_s, p.size(),
                                  self._pool_headroom(st, s, p, down,
-                                                     assume_live=True)))
+                                                     assume_live=True,
+                                                     t=t)))
                 pick = asc.pick_scale_up(views)
                 if pick is None:
                     continue     # streak stays armed: the first probe after
@@ -2439,7 +2512,8 @@ class Gateway:
                 # whole split onto a cloud that cannot actually grow
                 others = [PoolView(c, p.profile.cost_per_s, p.size(),
                                    self._pool_headroom(st, s, p, down,
-                                                       assume_live=True))
+                                                       assume_live=True,
+                                                       t=t))
                           for c, p in live if c != (src.cloud if src else None)]
                 dst = asc.pick_scale_up(others)
                 if src is None or dst is None:
@@ -2473,7 +2547,8 @@ class Gateway:
 
     def _pool_headroom(self, st, s: _ModelState, pool: _Pool,
                        down: Optional[dict] = None,
-                       assume_live: bool = False) -> int:
+                       assume_live: bool = False,
+                       t: Optional[float] = None) -> int:
         """Replicas this pool can still add under its weight share, the
         deployment budget, and the shared cloud capacity.  assume_live
         asks "could this cloud absorb a weight shift?": it prices a
@@ -2494,7 +2569,13 @@ class Gateway:
                        budget - s.total_pool())
         cap = self.capacity.get(cloud)
         if cap is not None:
-            room = min(room, cap - self._cloud_usage(st, cloud))
+            used = self._cloud_usage(st, cloud)
+            if self.market is not None and t is not None \
+                    and not self.market.serving_priority:
+                # without priority, live training leases block the slots;
+                # with priority they are preemptible, i.e. free headroom
+                used += self.market.training_active(cloud, t)
+            room = min(room, cap - used)
         return max(room, 0)
 
     def _autoscale(self, s: _ModelState, t: float, events: EventHeap, st,
@@ -2542,6 +2623,48 @@ class Gateway:
         if self.record_batches:
             self.usage_trace.append((t, cloud, self._cloud_usage(st, cloud)))
 
+    # -- capacity-market bridge (market mode only) ---------------------------
+    def _market_lease(self, model: str, cloud: str, t: float, *,
+                      force: bool = False):
+        """Take one serving lease for ``model`` on ``cloud`` at ``t``,
+        preempting recorded/live training leases while the ledger is full
+        (serving priority; ``force`` is the floor path, which always
+        wins).  Returns the Lease, or None on an unledgered cloud / when
+        priority is off and the cloud is full."""
+        led = self.market.ledger(cloud)
+        if led is None:
+            return None
+        lease = led.lease("serving", f"pool:{model}", t)
+        while lease is None and (force or self.market.serving_priority):
+            victim = led.preempt_youngest(t, "training")
+            if victim is None:
+                break
+            self.log.record("capacity:preempt", 0.0, model=model,
+                            cloud=cloud, holder=victim.holder,
+                            t_sim=round(t, 6))
+            lease = led.lease("serving", f"pool:{model}", t)
+        if lease is not None:
+            self._leases.setdefault((model, cloud), []).append(lease)
+            self.log.record("capacity:lease", 0.0, model=model, cloud=cloud,
+                            kind="serving", t_sim=round(t, 6))
+        return lease
+
+    def _market_release(self, model: str, cloud: str, t: float,
+                        n: int = 1) -> None:
+        """Close ``n`` of ``model``'s serving leases on ``cloud`` at
+        ``t``.  Leases are fungible within a pool: the newest open one is
+        released first."""
+        led = self.market.ledger(cloud)
+        leases = self._leases.get((model, cloud))
+        if led is None or not leases:
+            return
+        for _ in range(n):
+            while leases and leases[-1].status != "active":
+                leases.pop()
+            if not leases:
+                return
+            led.release(leases.pop(), t)
+
     def _launch(self, s: _ModelState, pool: _Pool, t: float,
                 events: EventHeap, st, down, *, from_zero: bool = False,
                 forced_cold: bool = False) -> bool:
@@ -2552,16 +2675,35 @@ class Gateway:
                             reason="cloud_down")
             return False
         cap = self.capacity.get(cloud)
-        if cap is not None and self._cloud_usage(st, cloud) >= cap:
-            if not from_zero:
-                self.log.record("gateway:scale_denied", 0.0, model=s.dep.name,
-                                cloud=cloud, t_sim=round(t, 6),
-                                reason="capacity")
-                return False
-            # a pool at size 0 would starve forever if every other pool on
-            # this cloud is warm-pinned: serve over budget, loudly
-            self.log.record("gateway:capacity_exceeded", 0.0,
-                            model=s.dep.name, cloud=cloud, t_sim=round(t, 6))
+        if cap is not None:
+            used = self._cloud_usage(st, cloud)
+            if self.market is not None:
+                # the ledger is the source of truth: live training leases
+                # occupy slots too.  With serving priority they are spot --
+                # preempt the youngest until this replica fits.
+                used += self.market.training_active(cloud, t)
+                while used >= cap:
+                    victim = self.market.preempt_training(cloud, t)
+                    if victim is None:
+                        break
+                    self.log.record("capacity:preempt", 0.0,
+                                    model=s.dep.name, cloud=cloud,
+                                    holder=victim.holder,
+                                    t_sim=round(t, 6))
+                    used -= 1
+            if used >= cap:
+                if not from_zero:
+                    self.log.record("gateway:scale_denied", 0.0,
+                                    model=s.dep.name, cloud=cloud,
+                                    t_sim=round(t, 6), reason="capacity")
+                    return False
+                # a pool at size 0 would starve forever if every other pool
+                # on this cloud is warm-pinned: serve over budget, loudly
+                self.log.record("gateway:capacity_exceeded", 0.0,
+                                model=s.dep.name, cloud=cloud,
+                                t_sim=round(t, 6))
+        if self.market is not None:
+            self._market_lease(s.dep.name, cloud, t)
         delay = s.dep.autoscaler.cfg.scale_up_delay_s
         pool.scheduled_up += 1
         pool.shed_pressure = 0           # the overload signal did its job
@@ -2578,6 +2720,8 @@ class Gateway:
                 st) -> None:
         pool.replica_seconds += max(t - r.created_s, 0.0)
         del pool.replicas[r.rid]
+        if self.market is not None:
+            self._market_release(s.dep.name, pool.profile.name, t)
         s.trace.append((t, s.total_pool()))
         self._note_usage(st, pool.profile.name, t)
         self.log.record("gateway:scale_down", 0.0, model=s.dep.name,

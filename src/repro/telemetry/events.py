@@ -107,6 +107,25 @@ DESIGN.md S4; t_sim stamps are simulated seconds):
                              replicas / cost_hr)
   pipeline:recurring         a recurring-run trigger fired (pipeline,
                              index, t_sim)
+
+Capacity-market vocabulary (clouds/capacity.py, DESIGN.md S8; recorded
+only when a CapacityMarket is shared between the Gateway and the
+Orchestrator -- shared_capacity=None emits none of these):
+  capacity:lease             a slot lease was granted on a cloud ledger
+                             (cloud, kind=serving|training, model/step)
+  capacity:preempt           serving demand truncated the youngest
+                             training lease (spot semantics), or a
+                             recorded serving rise-edge killed a running
+                             training attempt, which re-enters the
+                             RetryPolicy backoff path
+  capacity:handoff           a relaunched serving pool migrated its model
+                             state over the interconnect instead of
+                             paying a cold load (src / dst / replicas /
+                             transfer_s / saved_s)
+  capacity:speculate         an outage window threatened a running
+                             training attempt and a backup attempt
+                             launched on a second cloud (the loser is
+                             cancelled through the ledger)
 """
 from __future__ import annotations
 
