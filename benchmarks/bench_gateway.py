@@ -22,7 +22,14 @@ plus a DISAGG scenario (ISSUE 8): a real ContinuousBatcher raced with
 chunked batched prefill against the teacher-forced seed path on a
 prefill-heavy mix, gated by an output-identity oracle leg; the
 disaggregated path must clear the asserted token-throughput floor (2x
-full, 1.3x smoke) without regressing the decode-step p99.
+full, 1.3x smoke) without regressing the decode-step p99 -- plus a
+DRIFT scenario (ISSUE 10): the profiling DAG measures the backend into
+ModelProfile artifacts per cloud, a profile-planned placement (every
+demand number from the store, zero hand-tuned constants) races the
+hand-tuned plan within 1.1x on p99, then an injected service-time shift
+must fire profile:drift strictly before the first
+``gateway:migrate reason=profile_drift`` (seq-ordered, asserted), and
+every bench event log carries only registered event kinds.
 
 Every scenario also lands in ``benchmarks/BENCH_gateway.json`` (per-scenario
 p50/p99, deadline-miss rates, shed rates, simulated dollars; schema
@@ -61,17 +68,21 @@ from repro.serving.gateway import (SLO_CLASSES, AdmissionConfig,
                                    FailureSpec, Gateway, ModelDemand,
                                    Predictor, ReplanConfig, RoutingConfig,
                                    SLOClass, TrafficSpec, plan_placement)
+from repro.modelci import ProfileSpec, ProfileStore, finalize, measure
+from repro.pipelines import DeploySpec
 from repro.telemetry.analyze import request_table, slowest_requests
-from repro.telemetry.events import EventLog
+from repro.telemetry.drift import DriftConfig
+from repro.telemetry.events import EventLog, unregistered
 from repro.telemetry.metrics import MetricsRegistry
 from repro.telemetry.slo import BurnRateConfig
 from repro.telemetry.trace import Tracer
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent / "BENCH_gateway.json"
-# schema 7: "contention" tier (training colocated with a serving burst on
-# one CapacityMarket, priority on vs off, ISSUE 9); schema 6 added the
-# "disagg" tier (chunked-prefill vs teacher-forced token throughput race)
-BENCH_SCHEMA = 7
+# schema 8: "drift" tier (profile-planned placement vs hand-tuned +
+# injected service-time shift through the DriftMonitor, ISSUE 10);
+# schema 7 added the "contention" tier (training colocated with a serving
+# burst on one CapacityMarket, priority on vs off, ISSUE 9)
+BENCH_SCHEMA = 8
 
 WIDTHS = {"small": 64, "medium": 128, "large": 256}
 # fleet-scale offered load in Erlangs (rate derived from the measured
@@ -183,6 +194,28 @@ def validate_bench(bench: dict, require: tuple = ()) -> None:
         if not -0.5 < ob["overhead_frac"] < 0.10:
             raise ValueError(
                 f"instrumentation overhead {ob['overhead_frac']} >= 10%")
+    if "drift" in sc:
+        dr = sc["drift"]
+        require_keys(dr, ("hand_p99_s", "profile_p99_s", "p99_ratio",
+                          "profiles_committed", "injected_factor", "drift",
+                          "scrapes"), "drift scenario")
+        if dr["p99_ratio"] > 1.1:
+            raise ValueError(f"profile-planned p99 {dr['p99_ratio']}x the "
+                             "hand-tuned plan (> 1.1x gate)")
+        if dr["profiles_committed"] < 2:
+            raise ValueError("profiling DAG committed fewer than 2 "
+                             "per-cloud artifacts")
+        d = dr["drift"]
+        require_keys(d, ("firing", "ratio", "first_drift_seq",
+                         "first_migrate_seq", "migrates_profile_drift",
+                         "reprofile_armed"), "drift.drift")
+        if d["firing"] < 1:
+            raise ValueError("injected shift never fired profile:drift")
+        if d["migrates_profile_drift"] < 1:
+            raise ValueError("drift never armed a profile_drift migrate")
+        if d["first_drift_seq"] > d["first_migrate_seq"]:
+            raise ValueError("profile:drift fired after the first "
+                             "reason=profile_drift migrate")
     if "contention" in sc:
         ct = sc["contention"]
         require_keys(ct, ("slots", "dedicated", "priority_on",
@@ -301,12 +334,13 @@ def run() -> list[dict]:
     rows.extend(_split_cost_scenario(preds["medium"], bench))
     rows.extend(_overload_shed_scenario(preds["small"], bench))
     rows.extend(_observability_scenario(preds["small"], bench))
+    rows.extend(_drift_scenario(preds["small"], bench))
     rows.extend(_contention_scenario(preds["small"], bench))
     rows.extend(_scale_scenario(bench))
     rows.extend(_disagg_scenario(bench))
     validate_bench(bench, require=("fleet", "slo_failover", "split_cost",
-                                   "overload", "observability", "contention",
-                                   "scale", "disagg"))
+                                   "overload", "observability", "drift",
+                                   "contention", "scale", "disagg"))
     BENCH_JSON.write_text(json.dumps(bench, indent=1, sort_keys=True))
     print(f"wrote {BENCH_JSON}", file=sys.stderr)
     return rows
@@ -656,6 +690,10 @@ def _observability_scenario(pred: Predictor, bench: dict) -> list[dict]:
     # after the streams end), so this yields a handful of scrapes per run
     # -- the Prometheus-like regime where scrape cost amortizes
     scrape_s = window_s / 2
+    # the drift monitor rides the scrape loop, so its per-scrape observe
+    # cost belongs inside the same overhead gate (no replan is armed, so
+    # the plane stays a pure observer)
+    profile = finalize(measure(pred, max_batch=8), "m", get_profile("gcp"))
 
     def run_once(instrumented: bool):
         log = EventLog()
@@ -664,13 +702,14 @@ def _observability_scenario(pred: Predictor, bench: dict) -> list[dict]:
                      admission=AdmissionConfig(),
                      tracer=Tracer() if instrumented else None,
                      metrics=MetricsRegistry() if instrumented else None,
-                     scrape_every_s=scrape_s if instrumented else None)
+                     scrape_every_s=scrape_s if instrumented else None,
+                     drift=DriftConfig() if instrumented else None)
         gw.deploy("m", pred,
                   split={get_profile("gcp"): 0.6, get_profile("ibm"): 0.4},
                   autoscaler=AutoscalerConfig(min_replicas=2, max_replicas=6,
                                               target_queue=8,
                                               idle_window_s=np.inf),
-                  max_batch=8)
+                  max_batch=8, planned_from=profile if instrumented else None)
         gc.collect()
         gc.disable()
         try:
@@ -715,6 +754,159 @@ def _observability_scenario(pred: Predictor, bench: dict) -> list[dict]:
                    f"wall_traced_s={wall_t:.5f};"
                    f"materialize_wall_s={mat:.5f};"
                    f"spans={len(gw_t.tracer.spans)};scrapes={scrapes}",
+    }]
+
+
+# -- model-CI drift tier (ISSUE 10): profile-planned placement + drift ------
+
+class _ShiftBackend:
+    """Serving backend whose cost model can be shifted BETWEEN runs (the
+    drift injection).  The gateway samples service times once at run()
+    start, so a mid-run mutation would be invisible; two runs sharing one
+    EventLog keep the drift-before-migrate seq ordering assertable."""
+
+    def __init__(self, inner, name: str):
+        self.inner = inner
+        self.name = name
+        self.factor = 1.0
+
+    def service_time(self, b: int) -> float:
+        return self.factor * self.inner.service_time(b)
+
+
+def _drift_scenario(pred: Predictor, bench: dict) -> list[dict]:
+    """Model-CI acceptance (ISSUE 10), two legs on one shared EventLog:
+
+    race   the profiling DAG (two pinned ``kind="profile"`` steps measuring
+           the same backend, one per cloud) commits ModelProfile artifacts
+           into a ProfileStore, a ``DeploySpec(profile=store)`` deploy step
+           plans the placement with EVERY demand number read from the
+           store, and the resulting fleet races the hand-tuned plan (same
+           measured service time entered as a constant) on identical
+           traffic/seed: profile-planned p99 must stay within 1.1x.
+
+    drift  the same deployment re-runs with the backend's service time
+           shifted 1.6x (the profile is now stale).  The DriftMonitor must
+           fire ``profile:drift`` (sustained out-of-band ratio at the
+           scrape cadence), arm a re-profile (``modelci:reprofile``), and
+           the replan probe must then migrate with reason=profile_drift --
+           strictly AFTER the drift edge in event order (asserted on seq).
+
+    Every event recorded across both legs must be registered vocabulary
+    (``events.unregistered``)."""
+    t8 = pred.service_time(8)
+    svc = t8 / 8
+    prof_g, prof_i = get_profile("gcp"), get_profile("ibm")
+    per_batch = prof_g.network_rtt_s + prof_g.lb_overhead_s + t8
+    clouds = [CloudCapacity(prof_g, 2, 1.0), CloudCapacity(prof_i, 2, 1.4)]
+    load = 2.0          # planned fleet-scale Erlangs (3 replicas, 2 clouds)
+    factor = 1.6        # injected shift; the stream below is sized so the
+    # shifted fleet stays underloaded (~80% of the 3-replica per-batch
+    # ceiling): ONLY the drift trigger may arm the probe -- no
+    # overload/miss/shed signal competes for the migrate reason
+    window_s = 60 * per_batch
+    rate = 0.5 * 3 * 8 / per_batch       # 50% of the measured ceiling
+    n = int(rate * window_s)
+    traffic = [TrafficSpec("ranker", n, arrival="poisson", rate=rate)]
+    asc = AutoscalerConfig(min_replicas=3, max_replicas=4, target_queue=8,
+                           scale_up_delay_s=0.01, idle_window_s=np.inf)
+
+    # hand-tuned leg: the same measured number, entered as a constant
+    demand = ModelDemand("ranker", rate=load / svc, service_time_s=svc)
+    hand = plan_placement([demand], clouds, objective="p99", split=True)
+    ah = hand.assignments[0]
+    assert hand.feasible and len(ah.shares) == 2, hand.summary()
+    gw_h = Gateway(log=EventLog())
+    gw_h.deploy("ranker", pred,
+                split={get_profile(c): w for c, w in ah.weights.items()},
+                autoscaler=asc, max_batch=8, queue_hint=dict(ah.est_wait_s))
+    out_h = gw_h.run(traffic, seed=0)
+    r_h = out_h.per_model["ranker"]
+
+    # profile-planned leg: profiling DAG -> store -> deploy, one shared log
+    store = ProfileStore()
+    serve = _ShiftBackend(pred, "ranker")
+    log = EventLog()
+    pipe = Pipeline("model-ci")
+    profs = [pipe.step(lambda: measure(pred, max_batch=8),
+                       name=f"profile_{c}", cache=False, kind="profile",
+                       pin=c, payload=ProfileSpec("ranker", store,
+                                                  max_batch=8))
+             for c in ("gcp", "ibm")]
+    pipe.step(lambda *_: serve, *profs, name="deploy", cache=False,
+              kind="deploy",
+              payload=DeploySpec("ranker", clouds, load_erlangs=load,
+                                 objective="p99", split=True,
+                                 autoscaler=asc, max_batch=8,
+                                 profile=store))
+    gw_p = Gateway(log=log,
+                   replan=ReplanConfig(check_every_s=4 * per_batch,
+                                       sustain=2, shift=0.25,
+                                       consolidate=False),
+                   metrics=MetricsRegistry(),
+                   drift=DriftConfig(threshold=1.3, sustain=2, min_n=8),
+                   scrape_every_s=3 * per_batch)
+    orch = Orchestrator({"gcp": 1, "ibm": 1}, log=log)
+    rec = orch.execute(pipe.compile(), gateway=gw_p)
+    assert rec.status == "succeeded", rec.steps
+    assert log.count("modelci:profile") >= 2
+    assert rec.outputs["deploy"]["profiled"] is True
+    worst = store.worst("ranker")
+    out_p = gw_p.run(traffic, seed=0)
+    r_p = out_p.per_model["ranker"]
+    ratio = r_p.p99 / r_h.p99
+
+    # drift leg: shift the backend, re-run on the SAME gateway + log
+    serve.factor = factor
+    gw_p.run(traffic, seed=1)
+    drifts = [e for e in log.named("profile:drift")
+              if e["state"] == "firing"]
+    migs = [e for e in log.named("gateway:migrate")
+            if e["reason"] == "profile_drift"]
+    reprof = sorted(gw_p.drift.pop_reprofile())
+
+    print(f"drift tier: profile-planned p99 {r_p.p99:.5f}s vs hand-tuned "
+          f"{r_h.p99:.5f}s ({ratio:.3f}x); shift {factor}x -> "
+          f"{len(drifts)} drift edge(s), {len(migs)} profile_drift "
+          f"migrate(s), reprofile armed for {reprof}", file=sys.stderr)
+
+    # acceptance: the measured-artifact plan matches hand-tuning; the
+    # injected shift is detected and ACTED on, detection strictly first
+    assert ratio <= 1.1, (r_p.p99, r_h.p99)
+    assert drifts, "injected shift never fired profile:drift"
+    assert migs, "drift never armed a reason=profile_drift migrate"
+    assert drifts[0]["seq"] <= migs[0]["seq"], (drifts[0], migs[0])
+    assert log.count("modelci:reprofile") >= 1 and reprof == ["ranker"]
+    # every bench event is registered vocabulary (ISSUE 10 satellite)
+    for lg in (log, gw_h.log):
+        assert not unregistered(lg), unregistered(lg)
+
+    bench["scenarios"]["drift"] = {
+        "hand_p99_s": _round(r_h.p99, 6),
+        "profile_p99_s": _round(r_p.p99, 6),
+        "p99_ratio": round(ratio, 4),
+        "profiles_committed": log.count("modelci:profile"),
+        "profile": {"cloud": worst.cloud, "key": worst.key,
+                    "service_time_s": round(worst.service_time_s, 9),
+                    "source": worst.source},
+        "planned": rec.outputs["deploy"],
+        "injected_factor": factor,
+        "drift": {"firing": len(drifts),
+                  "ratio": drifts[0]["ratio"],
+                  "first_drift_seq": drifts[0]["seq"],
+                  "first_migrate_seq": migs[0]["seq"],
+                  "migrates_profile_drift": len(migs),
+                  "reprofile_armed": reprof},
+        "scrapes": log.count("metrics:scrape")}
+    return [{
+        "name": "gateway_drift_race",
+        "us_per_call": r_p.p99 * 1e6,
+        "derived": f"p99_ratio={ratio:.4f};"
+                   f"profiles={log.count('modelci:profile')};"
+                   f"drift_firing={len(drifts)};"
+                   f"drift_seq={drifts[0]['seq']};"
+                   f"migrate_seq={migs[0]['seq']};"
+                   f"injected_factor={factor}",
     }]
 
 
@@ -1180,28 +1372,31 @@ def smoke() -> None:
     """CI bench-smoke: run the overload scenario (with its burn-rate
     telemetry leg), the instrumentation-overhead race, the contention
     race (ISSUE 9: training + serving burst through one CapacityMarket,
-    priority on vs off), the reduced scale tier (engine oracle + >=10x
-    vector-over-scalar on a smaller request count) and the reduced disagg
-    tier (output oracle + >=1.3x chunked-prefill token throughput), then
-    validate both the freshly produced record and (when present) the
-    committed BENCH_gateway.json against the schema -- including the
-    shed-rate fields, the alert-before-migrate ordering, the <10%
-    overhead gate, the contention ratios and the recorded scale / disagg
-    speedups."""
+    priority on vs off), the model-CI drift tier (ISSUE 10:
+    profile-planned placement + injected shift -> profile:drift before
+    the profile_drift migrate), the reduced scale tier (engine oracle +
+    >=10x vector-over-scalar on a smaller request count) and the reduced
+    disagg tier (output oracle + >=1.3x chunked-prefill token
+    throughput), then validate both the freshly produced record and
+    (when present) the committed BENCH_gateway.json against the schema
+    -- including the shed-rate fields, the alert-before-migrate
+    ordering, the <10% overhead gate, the drift seq ordering, the
+    contention ratios and the recorded scale / disagg speedups."""
     pred = _make_predictor("small", WIDTHS["small"])
     bench: dict = {"schema": BENCH_SCHEMA, "scenarios": {}}
     _overload_shed_scenario(pred, bench)
     _observability_scenario(pred, bench)
+    _drift_scenario(pred, bench)
     _contention_scenario(pred, bench)
     _scale_scenario(bench, smoke=True)
     _disagg_scenario(bench, smoke=True)
-    validate_bench(bench, require=("overload", "observability", "contention",
-                                   "scale", "disagg"))
+    validate_bench(bench, require=("overload", "observability", "drift",
+                                   "contention", "scale", "disagg"))
     if BENCH_JSON.exists():
         validate_bench(json.loads(BENCH_JSON.read_text()),
                        require=("fleet", "slo_failover", "split_cost",
-                                "overload", "observability", "contention",
-                                "scale", "disagg"))
+                                "overload", "observability", "drift",
+                                "contention", "scale", "disagg"))
         print(f"validated {BENCH_JSON}", file=sys.stderr)
     print("overload race:",
           json.dumps(bench["scenarios"]["overload"]["race"]),

@@ -1,0 +1,98 @@
+"""Diff two BENCH_*.json records with a relative tolerance (ISSUE 10
+satellite): the perf-trajectory companion to ``validate_bench``.
+
+The bench suites already persist per-scenario numbers (p50/p99, shed
+rates, simulated dollars, speedups) precisely so the trajectory is
+tracked across PRs -- but until now "tracked" meant a human eyeballing
+the JSON diff.  ``compare()`` walks the ``scenarios`` tree of an old and
+a new record and reports every shared numeric leaf whose relative change
+exceeds the tolerance, in either direction: a regression AND a
+too-good-to-be-true improvement both deserve a look before merge.
+
+Wall-clock-derived leaves move with the host, so the default tolerance
+is generous (25%); CI runs this as a NON-BLOCKING step against the
+committed record from the main branch (``continue-on-error``) -- the
+output is a review aid, not a merge gate, because a hosted runner's
+timings drift far more than a pinned box's.
+
+CLI::
+
+    python benchmarks/compare.py OLD.json NEW.json [--tol 0.25]
+
+Exit status 1 when any leaf drifted past tolerance (so the CI step
+annotates), 0 otherwise.  Schema version changes are reported and the
+scenarios common to both records are still compared.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _leaves(node, path: str, out: dict) -> None:
+    """Flatten nested dicts to {dotted.path: numeric leaf}; bools are
+    config flags, not measurements, and strings/lists carry labels."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            _leaves(node[k], f"{path}.{k}" if path else str(k), out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[path] = float(node)
+
+
+def compare(old: dict, new: dict, *, tol: float = 0.25) -> list:
+    """Every shared numeric leaf under ``scenarios`` whose relative
+    change exceeds ``tol``, as dicts: {path, old, new, rel}.  ``rel`` is
+    (new - old) / |old|; a leaf appearing or disappearing is not drift
+    (schema evolution adds scenarios -- ``validate_bench`` owns presence),
+    and an old value of exactly 0 flags any nonzero new value."""
+    if tol < 0:
+        raise ValueError("tol must be >= 0")
+    a, b = {}, {}
+    _leaves(old.get("scenarios", {}), "", a)
+    _leaves(new.get("scenarios", {}), "", b)
+    drifted = []
+    for path in sorted(set(a) & set(b)):
+        va, vb = a[path], b[path]
+        if va == vb:
+            continue
+        rel = (vb - va) / abs(va) if va != 0 else float("inf")
+        if abs(rel) > tol:
+            drifted.append({"path": path, "old": va, "new": vb,
+                            "rel": rel})
+    return drifted
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json records with a tolerance")
+    ap.add_argument("old", type=pathlib.Path,
+                    help="committed record (the baseline)")
+    ap.add_argument("new", type=pathlib.Path,
+                    help="freshly produced record")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative tolerance per numeric leaf "
+                         "(default 0.25)")
+    args = ap.parse_args(argv)
+    old = json.loads(args.old.read_text())
+    new = json.loads(args.new.read_text())
+    if old.get("schema") != new.get("schema"):
+        print(f"schema {old.get('schema')} -> {new.get('schema')} "
+              "(comparing shared scenarios only)")
+    drifted = compare(old, new, tol=args.tol)
+    if not drifted:
+        print(f"no drift beyond {args.tol:.0%} "
+              f"({args.old.name} -> {args.new.name})")
+        return 0
+    width = max(len(d["path"]) for d in drifted)
+    for d in drifted:
+        rel = "new!=0" if d["rel"] == float("inf") else f"{d['rel']:+.1%}"
+        print(f"{d['path']:<{width}}  {d['old']:>12.6g} -> "
+              f"{d['new']:>12.6g}  ({rel})")
+    print(f"{len(drifted)} leaf/leaves drifted beyond {args.tol:.0%}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,17 @@ the recorded training leases in its way and preempts the youngest (spot
 semantics, logged capacity:preempt) -- the colocated-cluster economics
 the paper's single-cluster deployments imply.
 
+The placement itself is planned from MEASURED Model-CI artifacts
+(ISSUE 10): two pinned ``kind="profile"`` steps measure the trained
+backend into per-cloud ``ModelProfile`` artifacts (committed into a
+ProfileStore over the orchestrator's own ArtifactCache), and the deploy
+step's ``DeploySpec(profile=store)`` derives every ``ModelDemand``
+number from the store -- no hand-entered service-time constant.  A
+second pipeline then profiles a REGISTRY model (gemma3-4b) analytically
+(``roofline_fields``: every term a closed form of the ArchConfig + the
+HardwareSpec constants) and deploys it behind a ``ProfiledBackend`` --
+an end-to-end deployment with zero hand-tuned numbers anywhere.
+
 Per DESIGN.md §1: stage compute and backend service times are MEASURED on
 this host; startup / RTT / transfer / dollar figures derive from the
 CloudProfile constants and are simulation outputs.
@@ -35,11 +46,15 @@ import jax.numpy as jnp
 
 from repro.clouds.capacity import CapacityMarket
 from repro.clouds.profiles import get_profile
+from repro.configs.registry import get_config
 from repro.core.pipeline import Pipeline
 from repro.core.trainjob import SupervisedTrainJob
 from repro.data.mnist import Batches, make_dataset
 from repro.models import lenet
-from repro.pipelines import DeploySpec, Orchestrator, PipelineRuns
+from repro.modelci import (ProfiledBackend, ProfileSpec, ProfileStore,
+                           measure, roofline_fields)
+from repro.pipelines import (ArtifactCache, DeploySpec, Orchestrator,
+                             PipelineRuns)
 from repro.serving.gateway import (AutoscalerConfig, CloudCapacity, Gateway,
                                    Predictor, TrafficSpec)
 from repro.telemetry.analyze import (request_table, run_table,
@@ -76,13 +91,32 @@ def main():
         pred.warmup((1, 8, 16))
         return pred
 
+    def profile(params):
+        # cloud-agnostic measurement of the trained backend; the
+        # orchestrator stamps the per-cloud load_s constant at commit
+        return measure(make_backend(params), max_batch=16, weights=params)
+
+    def deploy_backend(params, *_profiles):
+        return make_backend(params)
+
+    # the profile artifacts live in the SAME ArtifactCache the step
+    # artifacts do: one residency/egress rule set for both
+    cache = ArtifactCache()
+    store = ProfileStore(cache)
+
     # authoring: the serial front-end DAG, compiled for the orchestrator.
     # gcp holds only 2 replicas, so the 2.0-Erlang demand (3 replicas at
-    # 0.7 target utilization) forces a genuinely split placement.
+    # 0.7 target utilization) forces a genuinely split placement --
+    # planned ENTIRELY from the committed profile artifacts
+    # (DeploySpec.profile): no service-time constant appears below.
     pipe = Pipeline("train-to-serve")
     best = pipe.step(tune)
     model = pipe.step(train, best)
-    pipe.step(make_backend, model, name="deploy", kind="deploy",
+    profs = [pipe.step(profile, model, name=f"profile_{c}", kind="profile",
+                       pin=c,
+                       payload=ProfileSpec("mnist", store, max_batch=16))
+             for c in ("gcp", "ibm")]
+    pipe.step(deploy_backend, model, *profs, name="deploy", kind="deploy",
               payload=DeploySpec(
                   "mnist",
                   clouds=[CloudCapacity(gcp, 2, 1.0),
@@ -91,7 +125,7 @@ def main():
                   autoscaler=AutoscalerConfig(min_replicas=3, max_replicas=4,
                                               target_queue=8,
                                               idle_window_s=2.0),
-                  max_batch=16))
+                  max_batch=16, profile=store))
     spec = pipe.compile()
 
     log = EventLog()
@@ -105,7 +139,7 @@ def main():
                  shared_capacity=market)
     # cost policy: tuning + training land on the CHEAPEST simulated cloud
     orch = Orchestrator({"gcp": 2, "ibm": 2}, policy="cost", log=log,
-                        tracer=tracer, shared_capacity=market)
+                        tracer=tracer, cache=cache, shared_capacity=market)
     runs = PipelineRuns(orch)
     recs = runs.recurring(spec, every_s=300.0, runs=2, gateway=gw)
 
@@ -119,6 +153,10 @@ def main():
     deploy_out = recs[-1].outputs["deploy"]
     print("deploy placement:", json.dumps(deploy_out["weights"]),
           "replicas:", json.dumps(deploy_out["replicas"]))
+    planned = store.worst("mnist")
+    print(f"planned from profile {planned.key} ({planned.cloud}, "
+          f"{planned.service_time_s * 1e6:.1f}us/req at "
+          f"batch {planned.max_batch}, {planned.memory_bytes} weight bytes)")
 
     # the paper's serving stage: stress the model the pipeline deployed
     backend = gw.deployments["mnist"].backend
@@ -144,14 +182,22 @@ def main():
           f"misses={registry.total('gateway_deadline_miss_total'):.0f} "
           f"spans={len(tracer.spans)}")
 
-    # acceptance: cheapest-cloud training, split deploy, cached rerun,
-    # and the deployed model actually served the traffic
+    # acceptance: cheapest-cloud training, profile-planned split deploy,
+    # cached rerun, and the deployed model actually served the traffic
     assert all(r.status == "succeeded" for r in recs)
-    assert all(r.cloud in (None, "gcp") for r in recs[0].steps.values()
-               if not r.cached), "cost policy must train on the cheap cloud"
+    assert all(recs[0].steps[n].cloud in (None, "gcp")
+               for n in ("tune", "train")
+               if not recs[0].steps[n].cached), \
+        "cost policy must train on the cheap cloud"
     assert len(deploy_out["replicas"]) == 2          # genuinely split
     assert abs(sum(deploy_out["weights"].values()) - 1.0) < 1e-6
-    assert recs[1].cache_hits == 2                   # tune + train cached
+    assert deploy_out["profiled"], "demand must come from the ProfileStore"
+    assert store.clouds("mnist") == ["gcp", "ibm"]   # one artifact per cloud
+    assert planned.source == "measured"
+    # tune + train + both profile measurements cached; a cache-hit profile
+    # firing still refreshes the store's latest pointer
+    assert recs[1].cache_hits == 4
+    assert log.count("modelci:profile") == 4         # committed every firing
     assert not recs[1].steps["deploy"].cached        # handoff re-executes
     assert res.n_requests == 512 and len(res.latencies_s) == 512
     assert log.count("pipeline:deploy") == 2
@@ -175,6 +221,56 @@ def main():
     assert request_roots
     assert all(s.span_id in linked for s in request_roots)
     assert n_served == len(request_roots) == 512
+
+    # -- registry-model leg (ISSUE 10): zero hand-tuned numbers ----------
+    # profile a registry ArchConfig analytically (roofline_fields: every
+    # term a closed form of the config + HardwareSpec constants), commit
+    # per-cloud artifacts into the SAME store, and deploy a
+    # ProfiledBackend whose cost model IS the artifact -- service time,
+    # demand and placement all trace back to the config
+    cfg = get_config("gemma3_4b")
+
+    def roofline_profile():
+        return roofline_fields(cfg)
+
+    gpipe = Pipeline("profile-gemma")
+    gprofs = [gpipe.step(roofline_profile, name=f"profile_{c}",
+                         kind="profile", pin=c,
+                         payload=ProfileSpec(cfg.name, store, max_batch=1))
+              for c in ("gcp", "ibm")]
+    # gcp's 2 market slots are fully held by the mnist serving floor
+    # (ISSUE 9 colocation), so the registry model's candidates are the
+    # big cloud only
+    gpipe.step(lambda *_: ProfiledBackend(store.worst(cfg.name)), *gprofs,
+               name="deploy", kind="deploy",
+               payload=DeploySpec(
+                   cfg.name,
+                   clouds=[CloudCapacity(ibm, 4, 1.4)],
+                   load_erlangs=1.0, objective="cost", split=True,
+                   autoscaler=AutoscalerConfig(min_replicas=2,
+                                               max_replicas=3,
+                                               target_queue=4,
+                                               idle_window_s=2.0),
+                   max_batch=1, profile=store))
+    grec = orch.execute(gpipe.compile(), gateway=gw)
+    gout = grec.outputs["deploy"]
+    gprof = store.worst(cfg.name)
+    print(f"\nregistry model {cfg.name}: roofline profile {gprof.key} "
+          f"({gprof.service_time_s * 1e3:.1f}ms/req, "
+          f"{gprof.memory_bytes / 1e9:.1f}GB weights) -> placement "
+          f"{json.dumps(gout['weights'])}")
+    gserved = gw.run([TrafficSpec(cfg.name, 24, arrival="poisson",
+                                  rate=0.5 / gprof.service_time_s)], seed=0)
+    gres = gserved.per_model[cfg.name]
+    print(f"registry stress test: 24 reqs p50 {gres.p50:.3f}s "
+          f"p99 {gres.p99:.3f}s sim ${gserved.total_cost_usd:.6f}")
+    assert grec.status == "succeeded"
+    assert gout["profiled"] and gprof.source == "roofline"
+    assert gres.n_requests == 24
+    # the analytic profile is derived, not typed in: its terms reproduce
+    # from the config alone
+    assert gprof.roofline is not None and gprof.memory_bytes == \
+        2 * cfg.approx_active_params()
 
 
 if __name__ == "__main__":

@@ -59,8 +59,9 @@ class Step:
         self.args = args
         self.kwargs = kwargs
         self.cache = cache
-        self.kind = kind                 # "compute" | "deploy"
-        self.payload = payload           # kind-specific config (DeploySpec)
+        self.kind = kind                 # "compute" | "deploy" | "profile"
+        self.payload = payload           # kind-specific config (DeploySpec
+        # for deploy, modelci.ProfileSpec for profile)
         self.sim_s = sim_s               # analytic simulated compute seconds
         self.pin = pin                   # force this cloud (orchestrator)
         self.output: Any = None
@@ -175,8 +176,9 @@ class StepSpec:
     index: int
     deps: tuple
     cache: bool = True
-    kind: str = "compute"                # "compute" | "deploy"
-    payload: Any = None                  # kind-specific (pipelines.DeploySpec)
+    kind: str = "compute"                # "compute" | "deploy" | "profile"
+    payload: Any = None                  # kind-specific (pipelines.DeploySpec
+    # for deploy, modelci.ProfileSpec for profile)
     sim_s: Optional[float] = None
     pin: Optional[str] = None
 
@@ -231,7 +233,7 @@ class Pipeline:
         never silently collide with an explicit one (two steps sharing a
         name made ``run()``'s {name: output} dict drop the earlier output
         and let cache keys alias)."""
-        if kind not in ("compute", "deploy"):
+        if kind not in ("compute", "deploy", "profile"):
             raise ValueError(f"unknown step kind {kind!r}")
         sname = name or fn.__name__
         taken = {s.name for s in self.steps}
@@ -264,8 +266,10 @@ class Pipeline:
     def compile(self) -> PipelineSpec:
         """Lower the authored DAG into the orchestrator's PipelineSpec.
         Deploy steps are never cached (the gateway handoff is a side
-        effect); the serial run() treats them as plain steps (the fn runs,
-        no gateway handoff -- orchestrator-only semantics)."""
+        effect); profile steps DO cache -- the fn's output is the raw
+        measurement dict and the ProfileStore commit re-runs on cached
+        completions.  The serial run() treats both as plain steps (the fn
+        runs; handoff/commit are orchestrator-only semantics)."""
         return PipelineSpec(self.name, [
             StepSpec(name=s.name, fn=s.fn, args=tuple(s.args),
                      kwargs=dict(s.kwargs), index=i,

@@ -33,10 +33,22 @@ A terminal ``kind="deploy"`` step closes the paper's train->serve loop:
 its fn builds a serving backend from the trained artifact, the orchestrator
 sizes a placement (``plan_placement``) from the backend's MEASURED service
 time and hands it to ``Gateway.deploy`` -- one run goes pipeline ->
-placement -> live gateway.
+placement -> live gateway.  With ``DeploySpec.profile`` set, demand comes
+from committed Model-CI profile artifacts instead (``ProfileStore.demand``)
+and the planned-from profile rides into ``Gateway.deploy`` for drift
+watching.
+
+A ``kind="profile"`` step (payload: ``modelci.ProfileSpec``) is the
+profiling DAG's measurement unit: its fn returns the raw profile field
+dict (``modelci.measure``/``roofline_fields`` -- JSON-able, so it CACHES
+across recurring runs) and on completion the orchestrator stamps the
+executing cloud's constants and commits the ModelProfile artifact into
+the spec's ProfileStore.  The commit re-runs on cached completions, so a
+cache-hit recurring firing still refreshes the store's ``latest``.
 
 Event vocabulary (telemetry/events.py): pipeline:run / schedule / step /
-cache_hit / transfer / retry / fail / skip / deploy / recurring.
+cache_hit / transfer / retry / fail / skip / deploy / recurring, plus
+modelci:profile on profile-step completion.
 """
 from __future__ import annotations
 
@@ -62,7 +74,16 @@ class DeploySpec:
     fixed ``rate`` (req/s) or a host-independent ``load_erlangs`` (offered
     load; rate = load / service_time) -- plans a placement over ``clouds``
     (placement.CloudCapacity list) and deploys the model active-active
-    through ``Gateway.deploy`` with the plan's weights and queue hints."""
+    through ``Gateway.deploy`` with the plan's weights and queue hints.
+
+    ``profile``: a ``modelci.ProfileStore`` (or anything with
+    ``demand``/``worst``).  When set, every demand number comes from
+    committed profile artifacts -- ``ModelDemand`` (service time and the
+    prefill/decode split) is derived via ``profile.demand(model, ...)``
+    restricted to the placement's candidate clouds, no profiles committed
+    for the model on those clouds is an infeasible deploy, and the worst
+    planned-from profile is handed through ``Gateway.deploy(planned_from=)``
+    so the serving-side drift monitor can compare plan vs observed."""
     model: str
     clouds: list
     rate: Optional[float] = None
@@ -71,6 +92,7 @@ class DeploySpec:
     split: bool = True
     autoscaler: Any = None               # gateway Autoscaler(Config) or None
     max_batch: int = 32
+    profile: Any = None                  # modelci.ProfileStore or None
 
     def __post_init__(self):
         if (self.rate is None) == (self.load_erlangs is None):
@@ -244,6 +266,14 @@ class Orchestrator:
                 if gateway is None:
                     raise ValueError(f"deploy step {s.name!r} needs "
                                      "execute(gateway=...)")
+            if s.kind == "profile":
+                # duck-typed on purpose: importing modelci here would cycle
+                # (modelci -> pipelines.artifacts -> this module)
+                p = s.payload
+                if p is None or not getattr(p, "model", None) \
+                        or not hasattr(getattr(p, "store", None), "put"):
+                    raise ValueError(f"profile step {s.name!r} needs a "
+                                     "ProfileSpec payload (model + store)")
         toposort([list(s.deps) for s in spec.steps])   # cycle check
         run_id = run_id or spec.name
         windows = self._windows(failures)
@@ -347,6 +377,10 @@ class Orchestrator:
             if s.deploy_info is not None:
                 self.log.record("pipeline:deploy", 0.0, step=names[i],
                                 t_sim=round(t, 6), **s.deploy_info)
+            if spec.steps[i].kind == "profile":
+                # runs on cached completions too: a cache-hit recurring
+                # firing must still refresh the store's `latest` pointer
+                self._profile_commit(spec.steps[i], s, pend["cloud"], t)
             self.log.record("pipeline:step", pend["dur"], step=names[i],
                             cloud=pend["cloud"], cached=pend["cached"],
                             attempts=len(rec.attempts),
@@ -942,18 +976,61 @@ class Orchestrator:
                          "span": att_span, "att_idx": att_idx,
                          "info": info}))
 
+    def _profile_commit(self, step, s: _StepState, cloud: Optional[str],
+                        t: float) -> None:
+        """kind="profile" terminal side effect: stamp the executing
+        cloud's constants onto the fn's raw measurement dict and commit
+        the ModelProfile artifact into the spec's store.  ``cloud`` is the
+        pin when set (per-cloud profiling DAGs pin their steps), else the
+        cloud the attempt/cache-hit landed on."""
+        from ..modelci.profile import finalize   # lazy: modelci imports
+        ps = step.payload                        # pipelines.artifacts
+        if not isinstance(s.output, dict):
+            raise TypeError(f"profile step {step.name!r} fn must return "
+                            "the raw profile field dict "
+                            "(modelci.measure / roofline_fields)")
+        name = step.pin or cloud
+        pool = self.pools.get(name) if name else None
+        prof = pool.profile if pool else PROFILES.get(name)
+        if prof is None:                 # retired cluster / unknown pool:
+            prof = next(iter(self.pools.values())).profile
+        mp = finalize(s.output, ps.model, prof)
+        ps.store.put(mp)
+        self.log.record("modelci:profile", 0.0, step=step.name,
+                        model=ps.model, cloud=mp.cloud, key=mp.key,
+                        service_time_s=round(mp.service_time_s, 9),
+                        source=mp.source, t_sim=round(t, 6))
+        if self.metrics is not None:
+            self.metrics.counter("modelci_profiles_total",
+                                 model=ps.model, cloud=mp.cloud).inc()
+
     def _plan_handoff(self, step, s: _StepState) -> bool:
         """Deploy planning: size a placement from the backend's measured
-        service time.  The Gateway.deploy call itself is DEFERRED to the
-        step's successful completion (finish) so a deploy step that
-        permanently fails leaves no live deployment behind.  The fn's
-        output (the backend) is replaced by a JSON-able summary; the
-        backend itself lives on inside the prepared deploy kwargs."""
+        service time -- or, with ``DeploySpec.profile`` set, from the
+        committed Model-CI profile artifacts (ProfileStore.demand), so no
+        hand-tuned service-time constant enters the plan.  The
+        Gateway.deploy call itself is DEFERRED to the step's successful
+        completion (finish) so a deploy step that permanently fails leaves
+        no live deployment behind.  The fn's output (the backend) is
+        replaced by a JSON-able summary; the backend itself lives on
+        inside the prepared deploy kwargs."""
         from ..serving.gateway.placement import ModelDemand, plan_placement
         ds: DeploySpec = step.payload
         backend = s.output
-        svc = backend.service_time(ds.max_batch) / ds.max_batch
-        rate = ds.rate if ds.rate is not None else ds.load_erlangs / svc
+        planned_profile = None
+        if ds.profile is not None:
+            cnames = [cc.profile.name for cc in ds.clouds]
+            try:
+                planned_profile = ds.profile.worst(ds.model, cnames)
+            except KeyError:
+                return False             # no artifacts: deploy_infeasible
+            dem = planned_profile.demand(rate=ds.rate,
+                                         load_erlangs=ds.load_erlangs)
+            svc, rate = dem.service_time_s, dem.rate
+        else:
+            svc = backend.service_time(ds.max_batch) / ds.max_batch
+            rate = ds.rate if ds.rate is not None else ds.load_erlangs / svc
+            dem = ModelDemand(ds.model, rate, svc)
         clouds = ds.clouds
         if self.market is not None:
             # placement headroom reads the ledger: a cloud can never host
@@ -966,7 +1043,7 @@ class Orchestrator:
                         cc.max_replicas,
                         self.market.ledger(cc.profile.name).slots))
                 for cc in ds.clouds]
-        plan = plan_placement([ModelDemand(ds.model, rate, svc)], clouds,
+        plan = plan_placement([dem], clouds,
                               objective=ds.objective, split=ds.split)
         a = plan.assignments[0]
         if not plan.feasible or not a.shares:
@@ -977,14 +1054,20 @@ class Orchestrator:
             split={profiles[c]: w for c, w in a.weights.items()},
             autoscaler=ds.autoscaler, max_batch=ds.max_batch,
             queue_hint=dict(a.est_wait_s))
+        if planned_profile is not None:
+            # the drift monitor compares serving observations against the
+            # exact artifact the placement was planned from
+            s.deploy_apply["planned_from"] = planned_profile
         # weights loaded onto every serving cloud: one model_load_s each
         s.extra_s = sum(profiles[c].model_load_s for c in a.shares)
         s.deploy_info = {"model": ds.model,
                          "weights": {c: round(w, 6)
                                      for c, w in a.weights.items()},
                          "replicas": dict(a.shares),
-                         "cost_hr": round(a.cost_hr, 6)}
+                         "cost_hr": round(a.cost_hr, 6),
+                         "profiled": planned_profile is not None}
         s.output = {"model": ds.model, "weights": dict(a.weights),
                     "replicas": dict(a.shares), "cost_hr": a.cost_hr,
-                    "est_p99_s": a.est_p99_s}
+                    "est_p99_s": a.est_p99_s,
+                    "profiled": planned_profile is not None}
         return True

@@ -87,6 +87,7 @@ import numpy as np
 
 from ...clouds.profiles import CloudProfile, get_profile
 from ...sim.engine import EventHeap, IndexQueue, Ledger
+from ...telemetry.drift import DriftConfig, DriftMonitor
 from ...telemetry.events import EventLog
 from ...telemetry.metrics import MetricsRegistry
 from ...telemetry.slo import BurnRateConfig, BurnRateMonitor
@@ -869,6 +870,15 @@ class Gateway:
     ``gateway:alert`` events, arms replan probes (reason=slo_burn) and
     adds scale-up pressure via Autoscaler.effective_queue.
 
+    drift: optional telemetry.drift.DriftConfig -- a DriftMonitor
+    (``self.drift``) compares each scrape's observed per-request service
+    time against the ModelProfile the deployment was planned from
+    (``deploy(profile=...)``, threaded through from
+    ``DeploySpec.profile``), emits ``profile:drift`` edges, arms
+    re-profiling (``modelci:reprofile``) and arms replan probes
+    (reason=profile_drift).  Needs ``scrape_every_s``: the scrape loop is
+    the monitor's clock.
+
     record_batches=True keeps a per-batch audit trail (batch_log) and a
     per-cloud usage trace (usage_trace) for the invariant test suite.
     After run(), ``final_weights`` holds each model's normalized live
@@ -883,6 +893,7 @@ class Gateway:
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  slo_burn: Optional[BurnRateConfig] = None,
+                 drift: Optional[DriftConfig] = None,
                  scrape_every_s: Optional[float] = None,
                  record_batches: bool = False,
                  shared_capacity=None):
@@ -906,6 +917,12 @@ class Gateway:
         self.metrics = metrics
         self.burn = (BurnRateMonitor(slo_burn, log=self.log, metrics=metrics)
                      if slo_burn is not None else None)
+        if drift is not None and (scrape_every_s is None or metrics is None):
+            raise ValueError("drift detection needs metrics= and "
+                             "scrape_every_s=: the scrape loop is the "
+                             "monitor's clock")
+        self.drift = (DriftMonitor(drift, log=self.log, metrics=metrics)
+                      if drift is not None else None)
         if scrape_every_s is not None and scrape_every_s <= 0:
             raise ValueError("scrape_every_s must be > 0")
         self.scrape_every_s = scrape_every_s
@@ -924,7 +941,8 @@ class Gateway:
                standby: Optional[CloudProfile] = None,
                queue_hint: Optional[dict] = None,
                trace_link: Optional[int] = None,
-               disagg: Optional[DisaggSpec] = None) -> Deployment:
+               disagg: Optional[DisaggSpec] = None,
+               planned_from=None) -> Deployment:
         """``profile`` places the model on one cloud (weight 1.0);
         ``split={CloudProfile: weight}`` places it active-active (weights
         must sum to 1).  With both, ``profile`` names the primary among the
@@ -935,7 +953,11 @@ class Gateway:
         pool has any queue of its own.  ``trace_link`` is the span id of
         the pipeline deploy step that produced this model (the orchestrator
         passes it through deploy_apply): request spans link to it, so one
-        train-to-serve run yields a single connected trace."""
+        train-to-serve run yields a single connected trace.
+        ``planned_from`` is the modelci.ModelProfile the placement was
+        sized against (DeploySpec.profile path): with ``drift`` enabled
+        the DriftMonitor watches this deployment's observed service time
+        against it."""
         if isinstance(autoscaler, AutoscalerConfig):
             autoscaler = Autoscaler(autoscaler)
         if split:
@@ -994,6 +1016,8 @@ class Gateway:
                          max_batch, canary, canary_fraction, standby,
                          placements, hint, trace_link, disagg)
         self.deployments[name] = dep
+        if planned_from is not None and self.drift is not None:
+            self.drift.watch(name, planned_from)
         return dep
 
     # -- discrete-event loop ------------------------------------------------
@@ -1024,6 +1048,8 @@ class Gateway:
         self._leases = {}                # (model, cloud) -> open Leases
         if self.burn is not None:
             self.burn.reset()            # windows are run-scoped
+        if self.drift is not None:
+            self.drift.reset()           # counter baselines are run-scoped
         if self.tracer is not None:
             self._run_span = self.tracer.start("gateway.run", 0.0,
                                                seed=int(seed))
@@ -1700,6 +1726,10 @@ class Gateway:
                         kg = s.kv_gauge_inst[c] = metrics.gauge(
                             "gateway_kv_blocks_used", model=m, cloud=c)
                     kg.set(pool.kv_used)
+            if self.drift is not None:
+                # cumulative counters in, deltas inside the monitor -- the
+                # same contract a Prometheus rate() has with a counter
+                self.drift.observe(t, m, float(s.busy_s), int(s.served))
         metrics.scrape(t, self.log)
 
     def _result(self, s: _ModelState, total: float) -> ServeResult:
@@ -2445,6 +2475,11 @@ class Gateway:
             # sliding windows typically trip BEFORE the probe-window rates
             # accumulate (it sees every completion, not probe epochs)
             burning = self.burn is not None and self.burn.is_burning(m)
+            # an active profile-drift alert arms the same shift: the live
+            # placement was sized from numbers the DriftMonitor has shown
+            # to be stale, so re-plan from observed demand while the
+            # re-profile is in flight
+            drifting = self.drift is not None and self.drift.is_drifting(m)
             was_shedding = s.win_shed > 0
             # the window is consumed by THIS probe whatever it decides --
             # an aborted shift (no destination) must not leak completions
@@ -2454,14 +2489,16 @@ class Gateway:
             s.win_epoch += 1
             for _, p in live:
                 p.shed_pressure = 0
-            if blocked or miss or shed_hot or burning:
+            if blocked or miss or shed_hot or burning or drifting:
                 s.streak["hot"] += 1
                 s.streak["cold"] = 0
                 # remember what ARMED the trigger: the firing probe's own
                 # flags may differ from what built the streak
                 s.streak_why = ("overload" if blocked
                                 else "miss_rate" if miss
-                                else "shed_rate" if shed_hot else "slo_burn")
+                                else "shed_rate" if shed_hot
+                                else "slo_burn" if burning
+                                else "profile_drift")
             else:
                 s.streak["hot"] = 0
                 idle_split = (cfg.consolidate and len(live) > 1

@@ -108,6 +108,23 @@ DESIGN.md S4; t_sim stamps are simulated seconds):
   pipeline:recurring         a recurring-run trigger fired (pipeline,
                              index, t_sim)
 
+Model-CI vocabulary (modelci/ + telemetry/drift.py, DESIGN.md S9):
+  modelci:profile            a measured ModelProfile artifact was committed
+                             to a ProfileStore (model / cloud / key /
+                             service_time_s) -- the profiling DAG's
+                             terminal side effect, one per profile step
+  modelci:reprofile          sustained profile-vs-observed drift armed a
+                             re-profile run for a model (the DriftMonitor
+                             is a controller: consumers re-run the
+                             profiling DAG for the named model)
+  profile:drift              drift edge between the profile a placement
+                             was planned from and the scraped serving
+                             metrics: state=firing when the observed /
+                             profiled service-time ratio leaves the
+                             tolerance band for ``sustain`` consecutive
+                             scrapes (carries ratio / expected_s /
+                             observed_s), state=resolved on recovery
+
 Capacity-market vocabulary (clouds/capacity.py, DESIGN.md S8; recorded
 only when a CapacityMarket is shared between the Gateway and the
 Orchestrator -- shared_capacity=None emits none of these):
@@ -137,6 +154,45 @@ from typing import Optional
 # meta keys that carry wall-clock measurements; dump() gates them so the
 # default export is byte-stable under a fixed seed
 _WALL_KEYS = ("wall_s",)
+
+# The machine-readable registry of every event kind documented above.
+# ``unregistered(log)`` is the bench-side gate: a run emitting an event
+# name missing from this set is recording vocabulary nobody documented
+# (or typo'd a name), which the suites treat as a failure.
+EVENT_KINDS = frozenset({
+    # gateway (DESIGN.md S3)
+    "gateway:run", "gateway:scale_up", "gateway:scale_down",
+    "gateway:scale_to_zero", "gateway:cold_start", "gateway:scale_denied",
+    "gateway:capacity_exceeded", "gateway:budget_exceeded",
+    "gateway:preempt", "gateway:shed", "gateway:split", "gateway:migrate",
+    "gateway:failover", "gateway:recover", "gateway:prefill",
+    "gateway:cache_shed", "gateway:observed", "gateway:alert",
+    # observability plane (DESIGN.md S5)
+    "metrics:scrape", "trace:materialize", "trace:export",
+    # pipeline orchestrator (DESIGN.md S4)
+    "pipeline:run", "pipeline:schedule", "pipeline:step",
+    "pipeline:cache_hit", "pipeline:transfer", "pipeline:retry",
+    "pipeline:fail", "pipeline:skip", "pipeline:deploy",
+    "pipeline:recurring",
+    # model-CI profiling plane (DESIGN.md S9)
+    "modelci:profile", "modelci:reprofile", "profile:drift",
+    # capacity market (DESIGN.md S8)
+    "capacity:lease", "capacity:preempt", "capacity:handoff",
+    "capacity:speculate",
+})
+
+
+def unregistered(log: "EventLog") -> set:
+    """Event names recorded in ``log`` that are absent from EVENT_KINDS.
+    Stage events (``wall=True``) are exempt: their names are free-form
+    wall-clock labels, not simulation vocabulary."""
+    out = set()
+    for e in log.events:
+        if e.get("wall"):
+            continue
+        if e["name"] not in EVENT_KINDS:
+            out.add(e["name"])
+    return out
 
 
 class EventLog:

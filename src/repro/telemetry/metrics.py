@@ -217,6 +217,18 @@ class Histogram:
         return self.sketch.snapshot()
 
 
+def _escape_label(v) -> str:
+    """Prometheus exposition escaping for label VALUES: backslash first
+    (escaping the escapes), then double-quote and newline."""
+    return (str(v).replace("\\", r"\\").replace('"', r"\"")
+            .replace("\n", r"\n"))
+
+
+def _escape_help(v: str) -> str:
+    """HELP text escaping: only backslash and newline (quotes are legal)."""
+    return v.replace("\\", r"\\").replace("\n", r"\n")
+
+
 class MetricsRegistry:
     """Label-keyed instrument families + simulated-time scrape snapshots.
 
@@ -230,6 +242,7 @@ class MetricsRegistry:
         self.sub = sub
         self._series: dict[tuple, object] = {}
         self._kinds: dict[str, str] = {}     # family name -> kind
+        self._help: dict[str, str] = {}      # family name -> HELP text
         self.scrapes: list[dict] = []
         self._fmt_cache: list = []           # sorted (key_str, inst) pairs;
         # rebuilt when a series appears (scrape re-sorts + re-formats
@@ -255,6 +268,11 @@ class MetricsRegistry:
 
     def histogram(self, name: str, **labels) -> Histogram:
         return self._get("histogram", name, labels)
+
+    def describe(self, name: str, text: str) -> None:
+        """Attach HELP text to a family (rendered by ``to_prometheus``;
+        families never described fall back to a kind-derived one-liner)."""
+        self._help[name] = str(text)
 
     # -- reads --------------------------------------------------------------
     def value(self, name: str, **labels):
@@ -301,18 +319,25 @@ class MetricsRegistry:
     def _fmt(name: str, labels: dict) -> str:
         if not labels:
             return name
-        inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+        inner = ",".join(f'{k}="{_escape_label(v)}"'
+                         for k, v in sorted(labels.items()))
         return f"{name}{{{inner}}}"
 
     def to_prometheus(self) -> str:
         """Prometheus text exposition of the CURRENT values (histograms as
-        _count/_sum plus p50/p99 quantile gauges from the sketch)."""
+        _count/_sum plus p50/p99 quantile gauges from the sketch).  Every
+        family gets a ``# HELP``/``# TYPE`` pair and label values are
+        escaped per the exposition format (backslash, quote, newline)."""
         by_family: dict[str, list] = {}
         for (n, labels), inst in sorted(self._series.items()):
             by_family.setdefault(n, []).append((dict(labels), inst))
         lines = []
         for name, series in by_family.items():
             kind = self._kinds[name]
+            help_text = self._help.get(
+                name, f"{'summary' if kind == 'histogram' else kind} "
+                      f"family {name}")
+            lines.append(f"# HELP {name} {_escape_help(help_text)}")
             lines.append(f"# TYPE {name} "
                          f"{'summary' if kind == 'histogram' else kind}")
             for labels, inst in series:

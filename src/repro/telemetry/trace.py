@@ -140,3 +140,32 @@ class Tracer:
             log.record("trace:export", 0.0, path=path or "",
                        spans=len(self.spans))
         return s
+
+    @classmethod
+    def from_json(cls, text: str) -> "Tracer":
+        """Rebuild a Tracer from a ``to_json`` export so the offline
+        analyzers (``analyze.request_table`` / ``run_table``) run against
+        the file exactly as they would against the live tracer.  The
+        export writes spans in id order and ids ARE list indices (the
+        ``get()`` contract), so a reordered or id-gapped blob is rejected
+        rather than silently re-keyed."""
+        rows = json.loads(text)
+        tr = cls()
+        for i, r in enumerate(rows):
+            if r["span_id"] != i:
+                raise ValueError(f"span id {r['span_id']} at position {i}: "
+                                 "ids must be the list indices")
+            span = Span(r["span_id"], r["trace_id"], r["parent_id"],
+                        r["name"], r["t0"], dict(r.get("attrs", {})),
+                        tuple(r.get("links", ())))
+            if r.get("t1") is not None:
+                span.t1 = float(r["t1"])
+            tr.spans.append(span)
+        tr._next = len(tr.spans)
+        return tr
+
+    @classmethod
+    def load(cls, path: str) -> "Tracer":
+        """``from_json`` over a file written by ``to_json(path)``."""
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -75,6 +75,48 @@ def test_model_flops_train_vs_decode():
     np.testing.assert_allclose(dec, 2 * n * 128)   # one token per sequence
 
 
+ASYNC_HLO = """\
+HloModule async_test
+
+ENTRY %main (p0: f32[128], p1: bf16[64,8]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  %p1 = bf16[64,8]{1,0} parameter(1)
+  %ars = f32[128]{0} all-reduce-start(%p0), replica_groups={}
+  %ard = f32[128]{0} all-reduce-done(%ars)
+  %rs = bf16[8,8]{1,0} reduce-scatter(%p1), dimensions={0}
+  %ags = (bf16[64,8]{1,0}, bf16[512,8]{1,0}) all-gather-start(%p1), dimensions={0}
+  ROOT %agd = bf16[512,8]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_bytes_async_start_done_counted_once():
+    """The async pair is ONE collective: the -start line carries the
+    transfer, the -done line is a wait and must not double-count."""
+    out = roofline.collective_bytes(ASYNC_HLO)
+    assert out["per_kind_counts"]["all-reduce"] == 1
+    assert out["per_kind_counts"]["all-gather"] == 1
+    assert out["per_kind_bytes"]["all-reduce"] == 128 * 4
+
+
+def test_collective_bytes_mixed_dtypes():
+    """bf16 and f32 collectives in one module size by their own dtype
+    widths (2 vs 4 bytes), not a shared element size."""
+    out = roofline.collective_bytes(ASYNC_HLO)
+    assert out["per_kind_bytes"]["reduce-scatter"] == 8 * 8 * 2
+    assert out["per_kind_bytes"]["all-reduce"] == 128 * 4
+
+
+def test_collective_bytes_tuple_outputs_sum_components():
+    """An async -start materializes a tuple (operand alias + destination
+    buffer): the parser sums every component of the tuple shape."""
+    out = roofline.collective_bytes(ASYNC_HLO)
+    assert out["per_kind_bytes"]["all-gather"] \
+        == (64 * 8 + 512 * 8) * 2
+    assert out["total_bytes"] == (128 * 4 + 8 * 8 * 2
+                                  + (64 * 8 + 512 * 8) * 2)
+
+
 def test_corrections_zero_when_inapplicable():
     dense = registry.get_config("granite_3_8b")
     assert roofline.slstm_correction_flops(dense, "train", 8, 128) == 0.0

@@ -173,6 +173,49 @@ def test_registry_scrape_series_and_export(tmp_path):
     assert len(blob["scrapes"]) == 2
 
 
+def test_prometheus_exposition_escapes_hostile_labels():
+    """Exposition-format hardening (ISSUE 10 satellite): a model named
+    with quotes, backslashes or newlines must produce a parseable text
+    page -- label values escape backslash FIRST, then quote and newline,
+    and HELP text escapes backslash and newline only."""
+    reg = MetricsRegistry()
+    hostile = 'mo"del\\with\nnewline'
+    reg.counter("gateway_requests_total", model=hostile).inc(2)
+    reg.describe("gateway_requests_total", 'requests "per" \\ model\nline2')
+    text = reg.to_prometheus()
+    line = next(ln for ln in text.splitlines()
+                if ln.startswith("gateway_requests_total{"))
+    # the raw newline never leaks into the page: one series, one line
+    assert line.endswith(" 2")
+    assert r'model="mo\"del\\with\nnewline"' in line
+    help_line = next(ln for ln in text.splitlines()
+                     if ln.startswith("# HELP gateway_requests_total"))
+    assert help_line == r'# HELP gateway_requests_total requests "per" \\ ' \
+                        "model\\nline2"
+    assert "# TYPE gateway_requests_total counter" in text
+
+
+def test_prometheus_exposition_help_type_per_family():
+    """Every family gets exactly one HELP/TYPE pair, before its samples;
+    histograms expose as summaries; undescribed families fall back to a
+    kind-derived HELP."""
+    reg = MetricsRegistry()
+    reg.counter("a_total", model="x").inc()
+    reg.counter("a_total", model="y").inc()
+    reg.gauge("b_depth").set(3)
+    reg.histogram("c_seconds").observe(0.5)
+    text = reg.to_prometheus()
+    lines = text.splitlines()
+    assert sum(ln.startswith("# HELP a_total") for ln in lines) == 1
+    assert sum(ln.startswith("# TYPE a_total") for ln in lines) == 1
+    assert "# TYPE b_depth gauge" in lines
+    assert "# TYPE c_seconds summary" in lines
+    assert "# HELP b_depth gauge family b_depth" in lines
+    # HELP/TYPE precede the family's first sample line
+    assert lines.index("# TYPE a_total counter") \
+        < lines.index('a_total{model="x"} 1')
+
+
 # -- EventLog determinism ----------------------------------------------------
 
 def test_eventlog_seq_and_index():
@@ -251,6 +294,41 @@ def test_tracer_json_export_records_event(tmp_path):
     assert len(blob) == 5 and blob[2]["name"] == "gateway.request"
     assert json.loads(p.read_text()) == blob
     assert log.named("trace:export")[0]["spans"] == 5
+
+
+def test_tracer_from_json_round_trip_offline_analysis(tmp_path):
+    """Offline re-analysis (ISSUE 10 satellite): a Tracer rebuilt from a
+    ``to_json`` export must drive the analyzers to the exact same tables
+    as the live tracer, survive a second export byte-identically, and
+    reject blobs whose span ids are not the list indices."""
+    tr, *_ = make_request_trace()
+    blob = tr.to_json()
+    back = Tracer.from_json(blob)
+    assert len(back.spans) == len(tr.spans)
+    assert back.to_json() == blob                        # lossless
+    assert request_table(back, 3) == request_table(tr, 3)
+    assert validate_trace(back) == []
+    # new spans keep allocating past the imported ids (the get() contract)
+    s = back.start("gateway.request", 9.0)
+    assert s.span_id == len(tr.spans)
+    # load() is from_json over a file written by to_json(path)
+    p = tmp_path / "trace.json"
+    tr.to_json(str(p))
+    assert Tracer.load(str(p)).to_json() == blob
+    # a reordered/id-gapped export is rejected, not silently re-keyed
+    rows = json.loads(blob)
+    rows[0], rows[1] = rows[1], rows[0]
+    with pytest.raises(ValueError):
+        Tracer.from_json(json.dumps(rows))
+
+
+def test_tracer_from_json_run_tables_match(tmp_path):
+    tr, run, _ = make_run_trace()
+    back = Tracer.from_json(tr.to_json())
+    assert run_table(back, run.span_id) == run_table(tr, run.span_id)
+    assert [s.attrs["step"]
+            for s in run_critical_path(back, run.span_id)] \
+        == [s.attrs["step"] for s in run_critical_path(tr, run.span_id)]
 
 
 def test_validate_trace_catches_malformed_spans():
